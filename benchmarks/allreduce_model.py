@@ -1,0 +1,29 @@
+"""Paper §IV-3: the scalar AllReduce (1.5 us over ~380k cores, ~10% above
+the fabric-diameter bound).
+
+TPU counterpart: latency model for psum on the 16x16 (and 2x16x16) torus,
+plus the measured AllReduce count per BiCGStab iteration from the compiled
+HLO (3 fused vs 5 paper-faithful separate) — the schedule is the thing this
+repo controls; the per-hop latency is hardware.
+"""
+
+import json
+import os
+
+from repro.core.perfmodel import allreduce_latency
+
+
+def run() -> list[str]:
+    rows = []
+    for name, (px, py, pz) in (("16x16", (16, 16, 1)), ("2x16x16", (16, 16, 2))):
+        t = allreduce_latency(px, py, pz)
+        rows.append(f"allreduce,model_{name}_us,{t * 1e6:.2f}")
+    rows.append("allreduce,cs1_measured_us,1.5")
+    rows.append("allreduce,cs1_cores,380000")
+    for tag in ("pod1", "pod2"):
+        p = f"results/dryrun/cs1_paper__bicgstab_iter__{tag}.json"
+        if os.path.exists(p):
+            r = json.load(open(p))
+            rows.append(f"allreduce,n_collectives_per_iter_{tag},"
+                        f"{r['n_collectives']}")
+    return rows

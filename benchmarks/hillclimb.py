@@ -1,0 +1,156 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: baseline -> optimized variants for the three
+chosen cells, each a hypothesis -> change -> measure cycle (EXPERIMENTS.md
+§Perf records the full log).
+
+Chosen cells (from the baseline roofline table):
+  1. stencil cs1_paper      — the paper's own technique (memory-bound)
+  2. qwen2_moe train_4k     — most collective-bound cell (MoE dispatch)
+  3. jamba long_500k        — worst roofline fraction (decode, batch=1)
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--cell stencil|moe|long]
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+
+HBM_BW = 819e9
+
+
+def _save(name: str, rec: dict, out="results/hillclimb"):
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    keys = ("t_compute_s", "t_memory_s", "t_collective_s", "t_bound_s",
+            "n_collectives", "dominant")
+    print(name, {k: rec.get(k) for k in keys})
+
+
+def stencil_variants():
+    """Iterate the memory/collective terms of the BiCGStab iteration down."""
+    from repro.launch.dryrun import lower_stencil_cell
+    from repro.core.perfmodel import allreduce_latency
+
+    X, Y, Z = 608, 608, 1536
+    pts_chip = X * Y * Z / 256
+
+    # V0: paper-faithful — blocking AllReduce per dot, streamed halos
+    rec = lower_stencil_cell("cs1_paper", False, fused=False, overlap=False)
+    rec["variant"] = "v0_paper_faithful"
+    rec["words_per_pt"] = 42
+    _save("stencil_v0_paper", rec)
+
+    # V1: fused reductions (3 sync points, 1 AllReduce each)
+    rec = lower_stencil_cell("cs1_paper", False, fused=True, overlap=False)
+    rec["variant"] = "v1_fused_reductions"
+    rec["words_per_pt"] = 42
+    _save("stencil_v1_fusedred", rec)
+
+    # V2: + overlapped halos (face-patch form; interior hides the permutes)
+    rec = lower_stencil_cell("cs1_paper", False, fused=True, overlap=True)
+    rec["variant"] = "v2_overlap_halo"
+    rec["words_per_pt"] = 42
+    _save("stencil_v2_overlap", rec)
+
+    # V3/V4: analytic schedule variants (Pallas fused sweeps, fp8 coeffs);
+    # interpret-mode Pallas cannot surface VMEM fusion in CPU cost analysis,
+    # so the memory term comes from the audited words/pt schedule
+    # (kernels exist + are tested: repro/kernels/fused_iter, stencil7).
+    for name, words, note in (
+        ("v3_fused_sweeps", 31,
+         "SpMV+dot epilogues, fused q/x/r/p updates (kernels/fused_iter)"),
+        ("v4_fp8_coeffs", 25,
+         "v3 + fp8(e4m3) coefficient diagonals (6 words -> 3 eq-words/SpMV)"),
+    ):
+        t_mem = words * 2 * pts_chip / HBM_BW
+        rec = {
+            "variant": name, "note": note, "words_per_pt": words,
+            "t_memory_s": t_mem,
+            "t_collective_s": 3 * allreduce_latency(16, 16),
+            "t_bound_s": t_mem + 3 * allreduce_latency(16, 16),
+            "analytic": True,
+        }
+        _save(f"stencil_{name}", rec)
+
+
+def moe_variants():
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_lm_cell
+
+    cfg = get_config("qwen2_moe_a2_7b")
+    v0 = lower_lm_cell("qwen2_moe_a2_7b", "train_4k", False,
+                       cfg=dataclasses.replace(cfg, moe_dispatch="scatter"))
+    v0["variant"] = "v0_scatter_dispatch"
+    _save("moe_v0_scatter", v0)
+
+    v1 = lower_lm_cell("qwen2_moe_a2_7b", "train_4k", False,
+                       cfg=dataclasses.replace(cfg, moe_dispatch="einsum"))
+    v1["variant"] = "v1_einsum_dispatch"
+    _save("moe_v1_einsum", v1)
+
+    # v2: einsum dispatch + larger groups (fewer cumsum edges, same flops)
+    v2 = lower_lm_cell("qwen2_moe_a2_7b", "train_4k", False,
+                       cfg=dataclasses.replace(cfg, moe_dispatch="einsum",
+                                               moe_group_size=4096))
+    v2["variant"] = "v2_einsum_group4096"
+    _save("moe_v2_group4096", v2)
+
+    # v3: expert-data-parallel — groups spread over the model axis too,
+    # expert weights replicated (qwen2-moe experts total ~1GB: affordable).
+    # Kills the down-proj AllReduce AND cuts per-chip MoE flops 16x.
+    from repro.models.param import rule_overrides
+    with rule_overrides({"moe_groups": ("pod", "data", "model"),
+                         "experts": None, "expert_ff": None}):
+        v3 = lower_lm_cell("qwen2_moe_a2_7b", "train_4k", False,
+                           cfg=dataclasses.replace(cfg, moe_dispatch="einsum"))
+    v3["variant"] = "v3_expert_data_parallel"
+    _save("moe_v3_edp", v3)
+
+
+def long_variants():
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_lm_cell
+    from repro.models.param import rule_overrides
+
+    cfg = get_config("jamba_v0_1_52b")
+    v0 = lower_lm_cell("jamba_v0_1_52b", "long_500k", False, cfg=cfg)
+    v0["variant"] = "v0_baseline_rules"
+    _save("long_v0_baseline", v0)
+
+    with rule_overrides({"kv_seq": ("model", "data")}):
+        v1 = lower_lm_cell("jamba_v0_1_52b", "long_500k", False, cfg=cfg)
+    v1["variant"] = "v1_kv_over_data"
+    _save("long_v1_kvdata", v1)
+
+    with rule_overrides({
+        "kv_seq": ("model", "data"),
+        "ff": ("model", "data"), "expert_ff": ("model", "data"),
+        "heads_flat": ("model", "data"), "vocab": ("model", "data"),
+        "heads": ("model", "data"), "kv_heads": ("model", "data"),
+    }):
+        v2 = lower_lm_cell("jamba_v0_1_52b", "long_500k", False, cfg=cfg)
+    v2["variant"] = "v2_weights_over_data_too"
+    _save("long_v2_weightsdata", v2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=["stencil", "moe", "long", "all"],
+                    default="all")
+    args = ap.parse_args()
+    if args.cell in ("stencil", "all"):
+        stencil_variants()
+    if args.cell in ("moe", "all"):
+        moe_variants()
+    if args.cell in ("long", "all"):
+        long_variants()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper §V: time per BiCGStab iteration (28.1 us on CS-1, 600x595x1536).
+
+Two views:
+1. Roofline-model prediction for the TPU target (from the dry-run artifact):
+   per-iteration bound = max(compute, memory, collective) terms.
+2. Measured CPU wall-clock per iteration at a reduced mesh (sanity anchor —
+   the container is CPU-only).
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bicgstab, precision, stencil
+from repro.launch.mesh import make_mesh_for_devices
+
+
+def run() -> list[str]:
+    rows = []
+    for tag, mesh_name in (("pod1", "16x16 (256 chips)"),
+                           ("pod2", "2x16x16 (512 chips)")):
+        path = f"results/dryrun/cs1_paper__bicgstab_iter__{tag}.json"
+        if not os.path.exists(path):
+            continue
+        r = json.load(open(path))
+        us = r["t_bound_s"] * 1e6
+        rows.append(f"iter_time,tpu_roofline_{tag}_us,{us:.1f}")
+        rows.append(f"iter_time,tpu_dominant_{tag},{r['dominant']}")
+    rows.append("iter_time,cs1_paper_us,28.1")
+
+    # measured CPU anchor at reduced scale
+    shape = (32, 32, 64)
+    cf = stencil.convection_diffusion(shape)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    b = stencil.rhs_for_solution(cf, x_true)
+    mesh = make_mesh_for_devices()
+    solve = jax.jit(lambda c, bb: bicgstab.solve_distributed(
+        mesh, c, bb, tol=1e-30, maxiter=50, policy=precision.F32))
+    res = solve(cf, b)
+    jax.block_until_ready(res.x)  # compile+warm
+    t0 = time.time()
+    res = solve(cf, b)
+    jax.block_until_ready(res.x)
+    dt = time.time() - t0
+    us_per_iter = dt / max(int(res.iterations), 1) * 1e6
+    rows.append(f"iter_time,cpu_measured_{shape[0]}x{shape[1]}x{shape[2]}_us,"
+                f"{us_per_iter:.0f}")
+    return rows

@@ -1,0 +1,286 @@
+"""Regenerate EXPERIMENTS.md from the dry-run / hillclimb / benchmark
+artifacts:  PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_report import dryrun_table, fmt_bytes, load_cells, roofline_table
+
+
+def _hc(name):
+    p = f"results/hillclimb/{name}.json"
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def _hc_row(name, label):
+    r = _hc(name)
+    if r is None:
+        return f"| {label} | (not run) | | | | |"
+    def s(key, scale=1.0, fmt="{:.3g}"):
+        v = r.get(key)
+        return fmt.format(v * scale) if isinstance(v, (int, float)) else "—"
+    return (f"| {label} | {s('t_compute_s')} | {s('t_memory_s')} "
+            f"| {s('t_collective_s')} | {s('t_bound_s')} "
+            f"| {r.get('n_collectives', '—')} |")
+
+
+def main() -> None:
+    from repro.core.perfmodel import mfix_timesteps_per_second
+    tps256 = mfix_timesteps_per_second((608, 608, 608), 256)
+    tps512 = mfix_timesteps_per_second((608, 608, 608), 512)
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+
+    doc = []
+    A = doc.append
+    A("""# EXPERIMENTS — Fast Stencil-Code Computation on a Wafer-Scale Processor, on a TPU-pod JAX framework
+
+Regenerate: `PYTHONPATH=src python -m benchmarks.make_experiments_md` (tables
+are rendered from `results/dryrun/*.json`, `results/hillclimb/*.json`, and
+`python -m benchmarks.run` output).
+
+Hardware model (assignment constants): TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI per chip.  Production mesh: 16x16 = 256
+chips/pod, 2 pods = 512 chips.  Container is CPU-only: every number below is
+derived from compiled artifacts (`lower().compile()` with 256/512 host
+devices), not wall clocks, except where marked "CPU-measured".
+
+## §Paper-validation (the faithful reproduction)
+
+| paper claim | this repo | verdict |
+|---|---|---|
+| Table I: 44 ops/meshpoint/iteration (24 matvec + 8 dot + 12 axpy) | analytic count = 44; compiled-HLO flops / (44·N) = **1.114** on the 600x595x1536 system (f32 twin; the 11% is boundary patching + `select`s) | reproduced |
+| §V: BiCGStab solves the 7-pt system; mixed fp16/32 with f32 reductions | BiCGStab (Alg. 1 line-for-line, `core/bicgstab.py`) with bf16 storage/products + f32 FMAC-style accumulation (`preferred_element_type`); converges on Poisson / convection-diffusion / random dominant systems to 1e-8 (tests) | reproduced (fp16->bf16, DESIGN §2) |
+| §IV-3: AllReduce in ~1.5 us over 380k cores (~diameter-bound) | latency model for the 16x16 torus: 2·diameter·1us ≈ **32 us/reduction**; 3 reduction points/iteration after batching | adapted (see §Perf: XLA's combiner already batches adjacent dots) |
+| Fig. 9: mixed precision tracks f32 then plateaus ~1e-2 | bf16-mixed tracks f32 to iteration ~7, plateaus at **1.18e-2** true-residual (f32 reaches 4e-4 in the same budget); see §Precision | reproduced |
+| §V: 28.1 us/iteration on CS-1 (0.86 PFLOPS ≈ 1/3 peak) | TPU roofline bound for the same mesh: **270 us/iter** on 256 chips, 135 us on 512 (memory-bound at ~0.2% of peak FLOPs) | explained: see roofline discussion below |
+| Figs. 7-8: Joule cluster 6 ms/iter at 16k cores (600³) | roofline model scaling table in `benchmarks/strong_scaling.py`; CPU-measured 1->8 devices exercises the halo/AllReduce path | adapted |
+| §VI: SIMPLE/MFIX, 80-125 timesteps/s projected (600³) | SIMPLE implemented end-to-end (`core/simple_cfd.py`, lid-driven cavity vs Ghia et al.); TPU projection via `core/perfmodel.py` ≈ **{tps256:.0f} steps/s** at 256 chips / {tps512:.0f} at 512 | reproduced + projected |
+
+**The central roofline story.**  The paper's whole point (Fig. 1) is that a
+7-point-stencil BiCGStab has arithmetic intensity ≈ 44 flops / 84 bytes ≈
+0.5 flop/B, while conventional accelerators need ~240 flop/B (TPU v5e:
+197e12/819e9) to hit peak.  Our compiled dry-run makes that quantitative:
+t_memory/t_compute ≈ **530x** per iteration — the solver can never exceed
+~0.2% MFU on this class of hardware, exactly the HPCG 0.5-3.1% regime the
+paper cites.  The CS-1's ~1 byte/flop SRAM machine runs the same algorithm
+at 33% of ITS peak.  Reproducing the paper on a TPU pod therefore means
+(a) reproducing the algorithm + numerics faithfully (above), and
+(b) driving the memory term toward its floor — which is §Perf.
+
+""".format(tps256=tps256, tps512=tps512))
+
+    A("## §Dry-run (86 cells: 10 archs x 4 shapes x 2 meshes + 3 stencil x 2)\n")
+    A(f"Result: **{len(ok)} ok / {len(skipped)} skipped / "
+      f"{len(cells) - len(ok) - len(skipped)} errors**.  Skips are the "
+      "assignment's long_500k gate for the 8 pure full-attention archs "
+      "(DESIGN.md §6); every skip is recorded with its reason.  Every ok cell "
+      "lowered AND compiled for both the 16x16 single-pod and 2x16x16 "
+      "multi-pod mesh with parameters, optimizer state, caches and batch as "
+      "sharded `ShapeDtypeStruct`s (donated where a real step would donate), "
+      "proving the `pod` axis shards.\n")
+    A("Columns: XLA memory_analysis per chip (CPU backend: temps are an "
+      "over-estimate — unfused attention/softmax chains that a TPU compile "
+      "keeps in VMEM; the analytic footprint column is the fits-proof: "
+      "params + optimizer + caches + remat stash; see "
+      "`launch/roofline_model.py`).\n")
+    A(dryrun_table(cells))
+    A("")
+    overflow = [c for c in ok if c.get("est_fits_16gb") is False]
+    A(f"Analytic footprint verdict: {len(ok) - len(overflow)} of {len(ok)} "
+      f"cells fit 16 GB/chip; over budget: "
+      f"{', '.join(c['arch'] + '/' + c['shape'] + '/' + c['mesh'] for c in overflow) or 'none'}.\n")
+    A("Interpretation: grok-1-314B train/prefill at global batch 256/32 do "
+      "not fit a single 256-chip v5e pod even with FSDP weight spreading + "
+      "ZeRO-1 + sequence parallelism (22.5/18.9 GB) — they are exactly what "
+      "the 2-pod mesh is for (13.4/11.6 GB, measured above).  This is the "
+      "multi-pod dry-run earning its keep.\n")
+
+    A("""## §Roofline (single-pod 16x16 mesh; multi-pod halves per-chip terms)
+
+Method: per-chip FLOPs/bytes from `compiled.cost_analysis()`; collective
+bytes parsed from the compiled HLO (`all-reduce|all-gather|reduce-scatter|
+all-to-all|collective-permute`, ring-model link factors, replica-group-aware).
+Two systematic CPU-backend artifacts are corrected and documented:
+(1) **loop bodies are cost-counted once** — fixed exactly by compiling
+unrolled 1- and 2-period probes and extrapolating (`model.probe_config`;
+bilinear in depth x seq_len for the linear-cost RWKV arch);
+(2) **unfused intermediates inflate "bytes accessed"** — reported as-is in
+`t_mem hlo` (spec-compliant) next to `t_mem est`, an analytic fused-executor
+estimate (weights + boundary activations + caches + MoE buffers + logits).
+`MODEL/HLO flops` = 6·N_active·D / HLO_FLOPs (2·N_active·D for serving) —
+the useful-compute fraction; low values = replicated math (e.g. whisper's
+20 heads and qwen2's 12 heads don't divide the 16-way model axis).
+""")
+    A(roofline_table(cells, "16x16"))
+    A("")
+    A("Baselines above are the paper-faithful/naive configurations "
+      "(scatter MoE dispatch, batch-following sharding rules). The three "
+      "hillclimbed cells below are reported separately, per the assignment.\n")
+
+    A("""## §Perf (hillclimb log: hypothesis -> change -> measure -> verdict)
+
+Cells chosen from the baseline table: the paper's own kernel
+(stencil/cs1_paper — most representative), the most collective-bound LM cell
+(qwen2_moe/train_4k), and the worst roofline fraction (jamba/long_500k).
+
+### 1. stencil cs1_paper (600x595x1536, BiCGStab iteration, 256 chips)
+
+Baseline terms (bf16-mixed; flops from the f32 twin — CPU counts bf16
+converts as flops, a 19x artifact absent on TPU, see `lower_stencil_cell`):
+
+| variant | t_comp (s) | t_mem (s) | t_coll bw (s) | t_bound (s) | collectives |
+|---|---|---|---|---|---|
+""")
+    A(_hc_row("stencil_v0_paper", "v0 paper-faithful (separate dots, streamed halos)"))
+    A(_hc_row("stencil_v1_fusedred", "v1 + batched reductions (3 sync points)"))
+    A(_hc_row("stencil_v2_overlap", "v2 + overlapped halos (face-patch form)"))
+    A(_hc_row("stencil_v3_fused_sweeps", "v3 + Pallas fused sweeps (42->31 words/pt, analytic)"))
+    A(_hc_row("stencil_v4_fp8_coeffs", "v4 + fp8(e4m3) coefficients (->25 words/pt, analytic)"))
+    A("""
+* **v0->v1 hypothesis**: batching the 5 blocking AllReduces into 3 cuts the
+  latency floor 40%.  **REFUTED by measurement**: both compile to the same
+  11 collectives — XLA's all-reduce combiner already merges the adjacent
+  independent dot reductions; the data-dependency structure (3 sync points)
+  is what matters, and both schedules have it.  Lesson: the paper's
+  hand-scheduled reduction tree is subsumed by the compiler on this stack;
+  we keep the fused form because it is explicit about the 3 sync points.
+* **v1->v2 hypothesis**: exchanging only halo faces and patching boundary
+  planes (instead of streaming concatenated copies) removes two full-volume
+  copies. **CONFIRMED (small)**: memory term -2%, and the dependent region
+  of each collective-permute shrinks to one plane, so the latency-hiding
+  scheduler can run halos under interior compute on TPU.
+* **v2->v3 hypothesis**: the iteration sweeps per-chip state 42 words/pt
+  (2 SpMV x 8 + 6 AXPY x 3 + 4 dot x 2); fusing SpMV+dot epilogues and the
+  q/x/r/p update+dot pairs (kernels/fused_iter, stencil7 — tested vs jnp
+  oracles) cuts it to 31. **CONFIRMED analytically** (-39% memory term);
+  interpret-mode Pallas cannot surface VMEM fusion in CPU cost analysis, so
+  this row is the audited schedule, not an HLO measurement.
+* **v3->v4 hypothesis**: coefficient diagonals dominate SpMV reads (12 of 16
+  words); storing them in fp8-e4m3 halves that traffic, and iterative
+  refinement (already validated, §Precision) absorbs the precision loss.
+  **CONFIRMED analytically** (-19% further).
+* **Latency floor**: 3 sync points x 2·diameter·~1us ≈ 96 us/iteration does
+  not shrink with per-chip volume; at 512 chips the memory term (68 us)
+  drops BELOW it.  This is the paper's §VII communication-avoiding-Krylov
+  point made quantitative: beyond ~512 chips, s-step/pipelined BiCGStab is
+  the only lever left.
+* Net: 275 us -> ~135 us/iteration bound (and 512-chip mesh: ~68 us memory
+  + 96 us latency), vs CS-1's 28.1 us — the remaining ~4x is the
+  bytes/flop gap that wafer-scale SRAM exists to remove.
+
+### 2. qwen2_moe_a2_7b / train_4k (most collective-bound)
+
+| variant | t_comp (s) | t_mem (s) | t_coll (s) | t_bound (s) | collectives |
+|---|---|---|---|---|---|
+""")
+    A(_hc_row("moe_v0_scatter", "v0 scatter dispatch (baseline)"))
+    A(_hc_row("moe_v1_einsum", "v1 GShard one-hot einsum dispatch"))
+    A(_hc_row("moe_v2_group4096", "v2 einsum + group 4096"))
+    A(_hc_row("moe_v3_edp", "v3 einsum + expert-data-parallel groups"))
+    A("""
+* **Prehistory**: under the first (naive) baseline this cell measured
+  **158.5 s** (archived: results/dryrun_naive_baseline) — the batched
+  scatter-add dispatch defeats the SPMD partitioner (41 GiB all-gathers +
+  83 GiB all-reduces per layer per chip).  Three baseline-hardening changes
+  (sequence-parallel activations, ZeRO-1, chunked loss — DESIGN §10b)
+  brought even the scatter path to 22.6 s before the cell-specific work.
+* **v0->v1 hypothesis**: one-hot dispatch/combine einsums partition
+  perfectly along the group axis (pure matmuls), trading ~g·E·cap·d extra
+  flops for zero dispatch collectives. **CONFIRMED**: collective term
+  22.6 -> 11.0 s, memory 10.4 -> 8.7 s (2.1x bound).
+* **v1->v2 hypothesis**: doubling group size halves cumsum edges at equal
+  flops. **REFUTED**: collective +11%, memory +23% (bigger dispatch
+  masks); reverted.
+* **v2->v3 hypothesis**: the remaining big collective is the down-proj
+  AllReduce ((n,E,cap,d) with ff sharded); spreading token groups over the
+  model axis with replicated expert weights (qwen2-moe experts total ~1 GB)
+  removes it and cuts per-chip MoE flops 16x. **CONFIRMED**: 11.0 -> 7.08 s
+  (collective 11.0 -> 7.1, memory 8.7 -> 6.3; compute drops 4.3x).
+* Net: **22x vs the naive baseline, 3.2x vs the hardened baseline**; still
+  collective-bound — the residual is gradient AllReduce + SP
+  gathers, whose next lever (int8 error-feedback compression, implemented
+  and convergence-tested in optim/compress.py) needs a shard_map DP loop to
+  express under GSPMD, noted as future work.
+* Default flipped to einsum dispatch for all MoE archs
+  (`ArchConfig.moe_dispatch`), scatter kept as the measured baseline.
+
+### 3. jamba_v0_1_52b / long_500k (worst roofline fraction)
+
+| variant | t_comp (s) | t_mem (s) | t_coll (s) | t_bound (s) | collectives |
+|---|---|---|---|---|---|
+""")
+    A(_hc_row("long_v0_baseline", "v0 baseline rules (batch-first sharding)"))
+    A(_hc_row("long_v1_kvdata", "v1 KV cache sequence-sharded over data too"))
+    A(_hc_row("long_v2_weightsdata", "v2 + weights sharded over data too"))
+    A("""
+* **v0 diagnosis**: at batch=1 the 16-way data axis idles; per-chip memory
+  is dominated by reading the model-axis-sharded weights (52B params / 16 =
+  6.5 GB/chip/token).
+* **v0->v1 hypothesis**: the 500k KV cache (525 MB/chip) is the next-biggest
+  reader; sharding `kv_seq` over (model, data) = 256-way cuts it 16x.
+  **CONFIRMED but small** (-16%): weights dominate, as the estimate said.
+* **v1->v2 hypothesis**: shard the weights over the idle data axis too
+  (ff/heads/vocab over 256 ways where divisible) — decode activations are
+  tiny so the extra psums are latency-trivial. **CONFIRMED**: memory term
+  60.3 ms -> **3.86 ms/token (15.6x)**; compute term -14x (replicated math
+  eliminated); collectives +16 ops (+10 us-scale latency).
+* Remaining 3.9 ms is ~50% HLO copy inflation around the cache update
+  (in-place on TPU) and ~0.5 ms true weight traffic: the est-model floor is
+  ~0.9 ms/token => decode at >1k tok/s/pod for a 52B hybrid at 500k context.
+* This sharding IS the paper's technique transplanted: spread the state so
+  every sweep is bandwidth-local, pay only nearest-neighbor/reduction
+  traffic (sequence-sharded flash-decode = partial softmax + AllReduce =
+  the paper's Fig. 6 pattern).
+* Upstreamed: the v2 rules are now jamba's and grok-1's config defaults
+  (`ArchConfig.rules`, FSDP-style weight spreading) — they are also what
+  makes the 314B/52B cells FIT 16 GB/chip at all (§Dry-run footprints).
+
+### Stopping criterion
+
+Three further candidates were napkin-mathed below the 5% threshold on their
+cells' dominant terms (dispatch-mask dtype int8: ~1%; halo-width-2 double
+buffering: <1% at these block sizes; remat policy tuning on train cells:
+memory-term neutral, compute +8%), so the loop stops per the protocol.
+""")
+
+    A("""## §Precision (paper Fig. 9 + §VI-B, reproduced and extended)
+
+`python -m benchmarks.run --only precision_residual` (convection-diffusion
+momentum-like system, true f32 residuals):
+
+| iteration | f32 | bf16-mixed |
+|---|---|---|
+| 1 | 1.54e-1 | 1.54e-1 |
+| 7 | 2.48e-2 | 1.47e-2 |
+| 16 | 1.60e-3 | 1.28e-2 |
+| 34 | 9.8e-4 | 1.18e-2 (plateau) |
+
+bf16-mixed tracks f32 to ~iteration 7 then plateaus at ~1.2e-2 — the same
+shape and magnitude as the paper's fp16 Fig. 9 (their plateau 1e-2).
+Beyond the paper: iterative refinement (f32 residuals, bf16-mixed inner
+solves) recovers full accuracy: 1.16e-2 -> 2.1e-4 -> 4.6e-6 -> 1.1e-7 over
+four outer solves at <10% extra traffic (`bicgstab.solve_refined`, tested).
+
+## §Scale-out notes (beyond the dry-run)
+
+* Fault tolerance: atomic manifest-gated checkpoints, async writes,
+  deterministic (seed, step) data replay, restart-budgeted runner — all
+  tested including injected mid-run failures and bit-identical replay
+  (tests/test_substrate.py, examples/train_lm.py).
+* Elasticity: checkpoints store logical arrays; restore reshards onto a
+  different mesh (tested 8 -> 4 devices).
+* Gradient compression: int8 + error feedback for the DP axis, convergence
+  tested; applies when DP crosses pods (50 GB/s links).
+""")
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(doc))
+    print("wrote EXPERIMENTS.md", len("\n".join(doc)), "bytes")
+
+
+if __name__ == "__main__":
+    main()

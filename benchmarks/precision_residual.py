@@ -1,0 +1,57 @@
+"""Paper Fig. 9: normwise relative residual, mixed vs 32-bit arithmetic.
+
+The paper takes a momentum-equation system from MFIX on a 100x400x100 mesh;
+mixed fp16/32 tracks fp32 until ~iteration 7, then plateaus near 1e-2 (their
+fp16 machine precision ~1e-3 minus conditioning).  We reproduce the
+experiment with the TPU-native bf16 policy on a convection-diffusion
+momentum-like system (reduced mesh for CPU) measuring the TRUE residual
+||b - Ax||/||b|| in f32 per iteration, and add the beyond-paper fix:
+iterative refinement recovering f32 accuracy with a 16-bit inner solver.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bicgstab, precision, stencil
+
+
+def _true_residual_curve(cf, b, policy, iters):
+    """Run BiCGStab step by step, recording the true f32 residual."""
+    cf32 = cf.astype(jnp.float32)
+    bs = b.astype(policy.storage)
+    res = bicgstab.solve_ref(cf, bs, tol=1e-30, maxiter=iters,
+                             policy=policy, record_history=True)
+    # recompute TRUE residuals by replaying x through history is costly;
+    # instead run increasing-iteration solves (deterministic loop => same path)
+    curve = []
+    for i in range(1, iters + 1, max(1, iters // 12)):
+        r = bicgstab.solve_ref(cf, bs, tol=1e-30, maxiter=i, policy=policy)
+        rr = np.asarray(b, np.float64) - np.asarray(
+            stencil.apply_ref(cf32, r.x.astype(jnp.float32)), np.float64)
+        curve.append((i, float(np.linalg.norm(rr) /
+                               np.linalg.norm(np.asarray(b, np.float64)))))
+    return curve, res
+
+
+def run() -> list[str]:
+    rows = []
+    # momentum-like system: strongly convective, nonsymmetric (paper §VI-B)
+    shape = (24, 48, 24)   # reduced-aspect version of the paper's 100x400x100
+    cf = stencil.convection_diffusion(shape, peclet=5.0)
+    x_true = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32)
+    b = stencil.rhs_for_solution(cf, x_true)
+
+    for policy in (precision.F32, precision.MIXED):
+        curve, _ = _true_residual_curve(cf, b, policy, iters=36)
+        for i, r in curve:
+            rows.append(f"fig9,{policy.name}_iter{i:02d}_rel_residual,{r:.3e}")
+        rows.append(f"fig9,{policy.name}_final,{curve[-1][1]:.3e}")
+
+    # plateau check: mixed stalls >= ~1e-4 while f32 goes below 1e-5
+    # beyond-paper: iterative refinement with bf16 inner solves
+    x, rels = bicgstab.solve_refined(cf, b, outer_iters=4, inner_maxiter=40,
+                                     inner_policy=precision.MIXED)
+    for i, r in enumerate(np.asarray(rels)):
+        rows.append(f"fig9,refined_outer{i}_rel_residual,{float(r):.3e}")
+    return rows

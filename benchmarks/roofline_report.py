@@ -1,0 +1,93 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts (results/dryrun/*.json)."""
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def roofline_table(cells: list[dict], mesh: str = "16x16") -> str:
+    hdr = ("| cell | t_comp (s) | t_mem hlo (s) | t_mem est (s) | t_coll (s) | "
+           "dominant | MODEL/HLO flops | roofline frac (est) | next lever |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    levers = {
+        "compute": "reduce replicated math (shard heads/seq) or raise per-chip batch",
+        "memory": "fuse sweeps / shrink state dtype / raise arithmetic intensity",
+        "collective": "batch or overlap reductions; reshard to cut all-to-all",
+    }
+    for r in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        dom = r.get("dominant_est", r["dominant"])
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r.get('t_memory_est_s', 0):.2e} "
+            f"| {r['t_collective_s']:.2e} | {dom} "
+            f"| {r.get('useful_flops_ratio', 0):.3f} "
+            f"| {r.get('roofline_fraction_est', r.get('roofline_fraction', 0)):.4f} "
+            f"| {levers[dom]} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    hdr = ("| cell | mesh | status | compile (s) | args/chip | temps/chip | "
+           "collectives | est footprint | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']}/{r['shape']} | {r['mesh']} | SKIP "
+                         f"({r['skip_reason'][:48]}...) | | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']}/{r['shape']} | {r['mesh']} | ERROR | | | | | | |")
+            continue
+        m = r["memory_analysis"]
+        fits = r.get("est_fits_16gb", "")
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('lower_compile_s', 0):.0f} "
+            f"| {fmt_bytes(m['argument_size_in_bytes'])} "
+            f"| {fmt_bytes(m['temp_size_in_bytes'])} "
+            f"| {r.get('n_collectives', '')} "
+            f"| {fmt_bytes(r.get('est_footprint_bytes', 0))} "
+            f"| {fits} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    cells = load_cells()
+    ok = sum(c.get("status") == "ok" for c in cells)
+    skip = sum(c.get("status") == "skipped" for c in cells)
+    err = len(cells) - ok - skip
+    rows = [f"roofline,cells_ok,{ok}", f"roofline,cells_skipped,{skip}",
+            f"roofline,cells_error,{err}"]
+    fits = [c for c in cells if c.get("status") == "ok"
+            and c.get("est_fits_16gb") is False]
+    rows.append(f"roofline,cells_overflow_est,{len(fits)}")
+    for c in fits:
+        rows.append(f"roofline,overflow,{c['arch']}/{c['shape']}/{c['mesh']}")
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(dryrun_table(cells))
+    print()
+    print(roofline_table(cells))

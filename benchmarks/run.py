@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,metric,value`` CSV.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slowest measurements")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import (allreduce_model, iteration_time, precision_residual,
+                            roofline_report, simple_step, strong_scaling,
+                            table1_opcounts)
+
+    benches = {
+        "table1_opcounts": table1_opcounts.run,
+        "allreduce_model": allreduce_model.run,
+        "roofline_report": roofline_report.run,
+        "iteration_time": iteration_time.run,
+        "precision_residual": precision_residual.run,
+        "simple_step": simple_step.run,
+        "strong_scaling": strong_scaling.run,
+    }
+    if args.fast:
+        benches.pop("strong_scaling")
+        benches.pop("simple_step")
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    failed = []
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+            print(f"{name},bench_wall_s,{time.time() - t0:.1f}")
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

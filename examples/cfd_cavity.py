@@ -1,0 +1,52 @@
+"""End-to-end CFD driver (paper §VI / Alg. 2): SIMPLE lid-driven cavity.
+
+Every outer iteration forms the u/v momentum and pressure-correction systems
+and solves them with the repo's BiCGStab — the exact structure the paper
+proposes for MFIX on the CS-1 (5 solver iterations for momentum, 20 for
+continuity).  Prints the residual history and an ASCII streamfunction.
+
+    PYTHONPATH=src python examples/cfd_cavity.py --n 32 --re 100
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.simple_cfd import CavityConfig, centerline_u, solve_cavity
+
+
+def ascii_stream(u, v, n=16):
+    """Coarse ASCII rendering of the flow (speed magnitude)."""
+    uc = 0.5 * (np.asarray(u)[1:, :] + np.asarray(u)[:-1, :])
+    vc = 0.5 * (np.asarray(v)[:, 1:] + np.asarray(v)[:, :-1])
+    speed = np.sqrt(uc ** 2 + vc ** 2)
+    sx = max(1, speed.shape[0] // n)
+    sy = max(1, speed.shape[1] // n)
+    s = speed[::sx, ::sy]
+    chars = " .:-=+*#%@"
+    q = (s / (s.max() + 1e-9) * (len(chars) - 1)).astype(int)
+    rows = ["".join(chars[c] for c in q[:, j]) for j in range(s.shape[1] - 1, -1, -1)]
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--re", type=float, default=100.0)
+    ap.add_argument("--iters", type=int, default=300)
+    args = ap.parse_args()
+
+    cfg = CavityConfig(n=args.n, reynolds=args.re, outer_iters=args.iters,
+                       tol=5e-6)
+    u, v, p, hist = solve_cavity(cfg)
+    print(f"SIMPLE outer iterations: {len(hist)} "
+          f"(continuity residual {hist[0]:.2e} -> {hist[-1]:.2e})")
+    cl = np.asarray(centerline_u(u))
+    print(f"centerline u: min={cl.min():.3f} (Ghia Re=100 reference ~ -0.21 "
+          f"on a fine grid; first-order upwind on {args.n}^2 is diffusive)")
+    print("\nflow speed (lid at top):")
+    print(ascii_stream(u, v))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: solve a 7-point stencil system with distributed mixed-precision
+BiCGStab — the paper's experiment in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py   # multi-device fabric
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bicgstab, precision, stencil
+from repro.launch.mesh import make_mesh_for_devices
+
+
+def main():
+    # A convection-diffusion system (nonsymmetric, diagonally dominant) on a
+    # 48 x 48 x 32 mesh, diagonally preconditioned to unit diagonal (paper §IV).
+    shape = (48, 48, 32)
+    coeffs = stencil.convection_diffusion(shape, peclet=5.0)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    b = stencil.rhs_for_solution(coeffs, x_true)
+
+    # Map the mesh onto the available chip fabric (Fig. 3) and solve in the
+    # paper's mixed precision: bf16 storage/arithmetic, f32 reductions.
+    mesh = make_mesh_for_devices()
+    print(f"fabric: {dict(mesh.shape)}")
+    result = bicgstab.solve_distributed(
+        mesh, coeffs, b.astype(jnp.bfloat16),
+        tol=1e-7, maxiter=200, policy=precision.MIXED,
+    )
+    print(f"converged={bool(result.converged)} in {int(result.iterations)} iters")
+
+    err = np.abs(np.asarray(result.x, np.float32) - np.asarray(x_true)).max()
+    print(f"max error vs manufactured solution (bf16 plateau): {err:.2e}")
+
+    # Beyond the paper: iterative refinement recovers f32 accuracy while the
+    # inner solver stays 16-bit (§VI-B made concrete).
+    x, rels = bicgstab.solve_refined(coeffs, b, mesh=mesh,
+                                     inner_policy=precision.MIXED)
+    err = np.abs(np.asarray(x) - np.asarray(x_true)).max()
+    print(f"after refinement: true-residual {float(rels[-1]):.2e}, "
+          f"max error {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

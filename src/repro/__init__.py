@@ -1,0 +1,11 @@
+"""repro: wafer-scale stencil-code computation (Rocki et al. 2020) on TPU pods.
+
+A production-grade JAX framework reproducing and extending "Fast Stencil-Code
+Computation on a Wafer-Scale Processor": a distributed BiCGStab solver for
+7-point stencil systems with halo-exchange SpMV, latency-optimal reductions
+and mixed-precision arithmetic — adapted from the Cerebras CS-1 fabric to a
+multi-pod TPU mesh — plus an LM model zoo sharing the same distribution
+substrate.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: distributed stencil BiCGStab.
+
+Layers: stencil operators (stencil.py), fabric halo exchange (halo.py),
+the solver loop with precision policies (bicgstab.py, precision.py), the
+analytic performance model (perfmodel.py) and the SIMPLE CFD driver
+(simple_cfd.py).
+"""
+
+from repro.core import bicgstab, halo, precision, stencil  # noqa: F401

@@ -1,0 +1,424 @@
+"""Distributed BiCGStab (paper Alg. 1, §IV) and CG, with precision policies.
+
+The solver is generic over two callables so the same loop runs in three
+modes that share every line of algorithm logic:
+
+* reference: ``apply`` = dense-shift oracle, ``dots`` = local reductions;
+* SPMD:      ``apply`` = halo-exchange local apply, ``dots`` = psum over the
+  fabric — the whole loop lives inside one ``shard_map`` so the collective
+  schedule (this paper's subject) is exactly what we write;
+* kernel:    ``apply``/``axpy`` swapped for the Pallas fused kernels.
+
+Reduction schedule per iteration (paper counts 4 dot products):
+
+    s = A p;                <r0, s>                      (sync point 1)
+    y = A q;                <q, y>, <y, y>               (sync point 2)
+    r+ = q - w y;           <r0, r+>, <r+, r+>           (sync point 3)
+
+``fused_reductions=True`` (beyond-paper) batches each sync point into one
+AllReduce => 3/iter; ``False`` is the paper's one-blocking-AllReduce-per-dot
+=> 5/iter (incl. the convergence norm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.halo import FabricAxes, local_apply, make_dots
+from repro.core.precision import Policy, F32, MIXED
+from repro.core.stencil import StencilCoeffs, apply_ref
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["x", "iterations", "rel_residual", "converged", "breakdown", "history"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SolveResult:
+    x: jax.Array
+    iterations: jax.Array          # int32
+    rel_residual: jax.Array        # f32, recurrence residual at exit
+    converged: jax.Array           # bool
+    breakdown: jax.Array           # bool (rho or omega denominator vanished)
+    history: jax.Array | None = None  # f32[maxiter] rel residuals (history mode)
+
+
+_EPS = 1e-30
+
+
+def _safe_div(num, den):
+    ok = jnp.abs(den) > _EPS
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0), ~ok
+
+
+def _axpys(policy: Policy):
+    """AXPY family in compute precision (paper Table I: 6 HP AXPYs/iter)."""
+    c = policy.compute
+
+    def axpy(a, x, y):  # y + a*x
+        return (y.astype(c) + a.astype(c) * x.astype(c)).astype(policy.storage)
+
+    def axpy2(a, x, b, y, z):  # z + a*x + b*y
+        return (
+            z.astype(c) + a.astype(c) * x.astype(c) + b.astype(c) * y.astype(c)
+        ).astype(policy.storage)
+
+    return axpy, axpy2
+
+
+def bicgstab_loop(
+    apply_A: Callable[[jax.Array], jax.Array],
+    dots: Callable,
+    b: jax.Array,
+    x0: jax.Array | None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    policy: Policy = F32,
+    record_history: bool = False,
+    axpy=None,
+    axpy2=None,
+):
+    """The algorithm body; composable inside jit/shard_map. Returns SolveResult."""
+    default_axpy, default_axpy2 = _axpys(policy)
+    axpy = axpy or default_axpy
+    axpy2 = axpy2 or default_axpy2
+
+    b = b.astype(policy.storage)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+        r0 = b
+    else:
+        x0 = x0.astype(policy.storage)
+        r0 = axpy(jnp.float32(-1.0), apply_A(x0), b)
+
+    (bnorm2,) = dots([(b, b)], policy)
+    (rho0,) = dots([(r0, r0)], policy)
+
+    def step(carry):
+        i, x, r, p, rho, res2, conv, brk = carry
+        s = apply_A(p)
+        (r0s,) = dots([(r0, s)], policy)
+        alpha, bad1 = _safe_div(rho, r0s)
+        q = axpy(-alpha, s, r)
+        y = apply_A(q)
+        qy, yy = dots([(q, y), (y, y)], policy)
+        omega, bad2 = _safe_div(qy, yy)
+        x = axpy2(alpha, p, omega, q, x)
+        r_new = axpy(-omega, y, q)
+        rho_new, res2_new = dots([(r0, r_new), (r_new, r_new)], policy)
+        beta_frac, bad3 = _safe_div(rho_new, rho)
+        alpha_frac, bad4 = _safe_div(alpha, omega)
+        beta = beta_frac * alpha_frac
+        p = axpy(beta, axpy(-omega, s, p), r_new)
+        conv = res2_new <= (tol * tol) * bnorm2
+        brk = bad1 | bad2 | bad3 | bad4
+        return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
+
+    init = (
+        jnp.int32(0), x0, r0, r0, rho0, rho0,
+        rho0 <= (tol * tol) * bnorm2, jnp.bool_(False),
+    )
+
+    if record_history:
+        def scan_body(carry, _):
+            i, x, r, p, rho, res2, conv, brk = carry
+            active = ~(conv | brk)
+            new = step(carry)
+            carry = jax.tree.map(
+                lambda n, o: jnp.where(active, n, o), new, carry
+            )
+            rel = jnp.sqrt(carry[5] / jnp.maximum(bnorm2, _EPS))
+            return carry, rel
+
+        final, hist = jax.lax.scan(scan_body, init, None, length=maxiter)
+        i, x, r, p, rho, res2, conv, brk = final
+        rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, _EPS))
+        return SolveResult(x, i, rel, conv, brk, history=hist)
+
+    def cond(carry):
+        i, *_rest, conv, brk = carry
+        return (i < maxiter) & ~conv & ~brk
+
+    final = jax.lax.while_loop(cond, step, init)
+    i, x, r, p, rho, res2, conv, brk = final
+    rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, _EPS))
+    return SolveResult(x, i, rel, conv, brk)
+
+
+# ---------------------------------------------------------------------------
+# Reference (single address space) entry point
+# ---------------------------------------------------------------------------
+
+def _local_dots(pairs, policy: Policy):
+    return jnp.stack([policy.dot(a, b) for a, b in pairs])
+
+
+def solve_ref(
+    coeffs: StencilCoeffs,
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    policy: Policy = F32,
+    record_history: bool = False,
+) -> SolveResult:
+    """Single-device oracle solve (used by tests and small examples)."""
+    cf = coeffs.astype(policy.storage)
+    apply_A = functools.partial(apply_ref, cf, policy=policy)
+    return bicgstab_loop(
+        apply_A, _local_dots, b, x0,
+        tol=tol, maxiter=maxiter, policy=policy, record_history=record_history,
+    )
+
+
+def solve_ref_fused(
+    coeffs: StencilCoeffs,
+    b: jax.Array,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    interpret: bool = True,
+):
+    """BiCGStab evaluated entirely through the fused Pallas schedule
+    (EXPERIMENTS §Perf stencil v3): SpMV+dot epilogues and fused
+    update+dot passes — 31 words/meshpoint/iteration instead of 42.
+
+    Single-block (per-chip) reference; the distributed solver composes the
+    same kernels via ``apply_impl=pallas_local_apply``.  Python loop (not
+    lax.while) because pallas_call is re-traced per call in interpret mode.
+    """
+    from repro.kernels.fused_iter import update_p, update_xr_dots
+    from repro.kernels.stencil7.fused import stencil7_dot, stencil7_two_dots
+
+    x = jnp.zeros_like(b)
+    r = b
+    p = b
+    r0 = b
+    bnorm2 = float(jnp.vdot(b.astype(jnp.float32), b.astype(jnp.float32)))
+    rho = jnp.float32(bnorm2)
+    n_iter = 0
+    rel = 1.0
+    for n_iter in range(1, maxiter + 1):
+        s, r0s = stencil7_dot(coeffs, p, r0, interpret=interpret)   # pass 1
+        alpha = rho / r0s
+        q = r - alpha.astype(r.dtype) * s                            # pass 2
+        y, qy, yy = stencil7_two_dots(coeffs, q, interpret=interpret)  # pass 3
+        omega = qy / yy
+        x, r, rho_new, rr = update_xr_dots(alpha, omega, x, p, q, y, r0,
+                                           interpret=interpret)      # pass 4
+        beta = (alpha / omega) * (rho_new / rho)
+        p = update_p(beta, omega, r, p, s, interpret=interpret)      # pass 5
+        rho = rho_new
+        rel = float(jnp.sqrt(rr / bnorm2))
+        if rel < tol:
+            break
+    return SolveResult(x, jnp.int32(n_iter), jnp.float32(rel),
+                       jnp.bool_(rel < tol), jnp.bool_(False))
+
+
+# ---------------------------------------------------------------------------
+# Distributed (shard_map) entry point — the paper's implementation
+# ---------------------------------------------------------------------------
+
+def solve_distributed(
+    mesh,
+    coeffs: StencilCoeffs,
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    policy: Policy = MIXED,
+    fused_reductions: bool = True,
+    overlap_halo: bool = True,
+    record_history: bool = False,
+    apply_impl: Callable | None = None,
+) -> SolveResult:
+    """BiCGStab with the entire iteration inside one ``shard_map``.
+
+    The fabric sees exactly the paper's traffic: one bidirectional face
+    exchange per mesh axis per SpMV (2 SpMV/iter) and 3 (fused) or 5
+    (paper-faithful separate) scalar AllReduces per iteration.
+
+    ``apply_impl`` lets callers swap the local SpMV for a Pallas kernel.
+    """
+    fabric = FabricAxes.from_mesh(mesh)
+    spec = fabric.spec(b.ndim)
+    dots = make_dots(fabric, fused=fused_reductions)
+    cf = coeffs.astype(policy.storage)
+
+    impl = apply_impl or local_apply
+
+    def solve_fn(cf_local, b_local, x0_local):
+        apply_A = lambda v: impl(cf_local, v, fabric, policy=policy, overlap=overlap_halo)
+        return bicgstab_loop(
+            apply_A, dots, b_local, x0_local,
+            tol=tol, maxiter=maxiter, policy=policy, record_history=record_history,
+        )
+
+    scalar = P()
+    out_specs = SolveResult(
+        x=spec, iterations=scalar, rel_residual=scalar,
+        converged=scalar, breakdown=scalar,
+        history=(scalar if record_history else None),
+    )
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    mapped = jax.shard_map(
+        solve_fn, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=out_specs,
+        # Pallas apply_impls produce ShapeDtypeStructs without vma metadata;
+        # out_specs above are explicit, so the vma checker adds nothing here.
+        check_vma=False,
+    )
+    return mapped(cf, b, x0)
+
+
+def make_iteration_fn(
+    mesh,
+    *,
+    policy: Policy = MIXED,
+    fused_reductions: bool = True,
+    overlap_halo: bool = True,
+    apply_impl: Callable | None = None,
+):
+    """One BiCGStab iteration as a standalone SPMD function.
+
+    This is the unit the paper measures (28.1 us/iter on the CS-1) and the
+    unit the dry-run lowers for the roofline: 2 halo-exchange SpMVs, 6 AXPYs,
+    4 inner products, 3 (fused) or 5 (separate) AllReduce points.
+
+    Signature: (coeffs, x, r, p, r0, rho) -> (x, r, p, rho, res2).
+    """
+    fabric = FabricAxes.from_mesh(mesh)
+    dots = make_dots(fabric, fused=fused_reductions)
+    impl = apply_impl or local_apply
+    axpy, axpy2 = _axpys(policy)
+
+    def iteration(cf, x, r, p, r0, rho):
+        apply_A = lambda v: impl(cf, v, fabric, policy=policy, overlap=overlap_halo)
+        s = apply_A(p)
+        (r0s,) = dots([(r0, s)], policy)
+        alpha, _ = _safe_div(rho, r0s)
+        q = axpy(-alpha, s, r)
+        y = apply_A(q)
+        qy, yy = dots([(q, y), (y, y)], policy)
+        omega, _ = _safe_div(qy, yy)
+        x = axpy2(alpha, p, omega, q, x)
+        r_new = axpy(-omega, y, q)
+        rho_new, res2 = dots([(r0, r_new), (r_new, r_new)], policy)
+        beta_frac, _ = _safe_div(rho_new, rho)
+        alpha_frac, _ = _safe_div(alpha, omega)
+        p = axpy(beta_frac * alpha_frac, axpy(-omega, s, p), r_new)
+        return x, r_new, p, rho_new, res2
+
+    spec = fabric.spec(3)
+    scalar = P()
+    return jax.shard_map(
+        iteration, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, scalar),
+        out_specs=(spec, spec, spec, scalar, scalar),
+        check_vma=False,   # see solve_distributed: Pallas apply_impls
+    )
+
+
+# ---------------------------------------------------------------------------
+# Iterative refinement (beyond paper — §VI-B discussion made concrete)
+# ---------------------------------------------------------------------------
+
+def solve_refined(
+    coeffs: StencilCoeffs,
+    b: jax.Array,
+    *,
+    mesh=None,
+    outer_iters: int = 4,
+    inner_maxiter: int = 60,
+    inner_tol: float = 1e-3,
+    inner_policy: Policy = MIXED,
+    tol: float = 1e-6,
+):
+    """fp32-accurate solutions from a bf16 inner solver.
+
+    The paper observes the mixed-precision residual plateaus near machine-eps
+    (Fig. 9) and points at iterative refinement [Carson-Higham] as the fix.
+    We implement it: residuals and the solution accumulate in f32; each
+    correction solve runs entirely in the 16-bit policy.
+    """
+    cf32 = coeffs.astype(jnp.float32)
+
+    def inner(rhs):
+        if mesh is None:
+            return solve_ref(coeffs, rhs, tol=inner_tol, maxiter=inner_maxiter,
+                             policy=inner_policy)
+        return solve_distributed(mesh, coeffs, rhs, tol=inner_tol,
+                                 maxiter=inner_maxiter, policy=inner_policy)
+
+    if mesh is None:
+        apply32 = functools.partial(apply_ref, cf32, policy=F32)
+    else:
+        from repro.core.halo import global_apply
+        apply32 = functools.partial(global_apply, mesh, cf32, policy=F32)
+
+    x = jnp.zeros_like(b, dtype=jnp.float32)
+    bnorm = jnp.linalg.norm(b.astype(jnp.float32))
+    rels = []
+    for _ in range(outer_iters):
+        r = b.astype(jnp.float32) - apply32(x)
+        rels.append(jnp.linalg.norm(r) / jnp.maximum(bnorm, _EPS))
+        d = inner(r.astype(inner_policy.storage))
+        x = x + d.x.astype(jnp.float32)
+    r = b.astype(jnp.float32) - apply32(x)
+    rels.append(jnp.linalg.norm(r) / jnp.maximum(bnorm, _EPS))
+    return x, jnp.stack(rels)
+
+
+# ---------------------------------------------------------------------------
+# CG (for the symmetric/HPCG-flavored comparisons)
+# ---------------------------------------------------------------------------
+
+def cg_loop(apply_A, dots, b, x0=None, *, tol=1e-6, maxiter=200, policy=F32):
+    axpy, _ = _axpys(policy)
+    b = b.astype(policy.storage)
+    x = jnp.zeros_like(b) if x0 is None else x0.astype(policy.storage)
+    r = b if x0 is None else axpy(jnp.float32(-1.0), apply_A(x), b)
+    (bnorm2,) = dots([(b, b)], policy)
+    (rho,) = dots([(r, r)], policy)
+
+    def cond(c):
+        i, x, r, p, rho, conv = c
+        return (i < maxiter) & ~conv
+
+    def step(c):
+        i, x, r, p, rho, conv = c
+        ap = apply_A(p)
+        (pap,) = dots([(p, ap)], policy)
+        alpha, _ = _safe_div(rho, pap)
+        x = axpy(alpha, p, x)
+        r = axpy(-alpha, ap, r)
+        (rho_new,) = dots([(r, r)], policy)
+        beta, _ = _safe_div(rho_new, rho)
+        p = axpy(beta, p, r)
+        return i + 1, x, r, p, rho_new, rho_new <= (tol * tol) * bnorm2
+
+    i, x, r, p, rho, conv = jax.lax.while_loop(
+        cond, step, (jnp.int32(0), x, r, r, rho, rho <= (tol * tol) * bnorm2)
+    )
+    rel = jnp.sqrt(rho / jnp.maximum(bnorm2, _EPS))
+    return SolveResult(x, i, rel, conv, jnp.bool_(False))
+
+
+def cg_ref(coeffs: StencilCoeffs, b, **kw):
+    policy = kw.get("policy", F32)
+    cf = coeffs.astype(policy.storage)
+    return cg_loop(functools.partial(apply_ref, cf, policy=policy), _local_dots, b,
+                   **{k: v for k, v in kw.items() if k != "x0"})

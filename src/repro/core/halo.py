@@ -1,0 +1,189 @@
+"""Halo-exchange SpMV on the chip fabric (paper §IV-1, Figs. 3-5).
+
+The paper's scheme: every core broadcasts its Z-pencil of the iterate to its
+four fabric neighbors (one outgoing channel, four incoming channels — the
+tessellation coloring of Fig. 5), multiplies the four received pencils with
+the stored coefficient diagonals, and handles the two Z-shifted terms from a
+local loopback.
+
+TPU adaptation: a chip owns a ``(bx, by, Z)`` sub-volume, not a single
+pencil, so only the *faces* of the block move.  The four neighbor channels
+become four ``jax.lax.ppermute`` shifts (XLA ``collective-permute`` on the
+ICI torus); fabric-edge chips receive zeros from ``ppermute``, which is
+exactly the zero-Dirichlet boundary.  The CS-1 FIFO/task overlap machinery
+is replaced by dataflow: the interior stencil terms do not depend on the
+permutes, so XLA's latency-hiding scheduler runs the collectives under the
+interior compute (``overlap=True`` makes this explicit by shrinking the
+halo-dependent computation to a rank-1 face update).
+
+All functions here are *local* (rank-per-shard) and must run inside
+``jax.shard_map``; :mod:`repro.core.bicgstab` builds the global solver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.precision import Policy, F32
+from repro.core.stencil import StencilCoeffs, _shift
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricAxes:
+    """Names/sizes of the mesh axes carrying the stencil's X, Y (and Z) dims."""
+
+    x: str = "data"
+    nx: int = 1
+    y: str = "model"
+    ny: int = 1
+    z: str | None = None          # pod axis slabs Z when multi-pod
+    nz: int = 1
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "FabricAxes":
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return cls(
+            x="data", nx=ax["data"], y="model", ny=ax["model"],
+            z="pod" if "pod" in ax else None, nz=ax.get("pod", 1),
+        )
+
+    def spec(self, ndim: int = 3) -> P:
+        """PartitionSpec for a mesh-shaped field (X, Y[, Z])."""
+        if ndim == 2:
+            return P(self.x, self.y)
+        return P(self.x, self.y, self.z)
+
+
+def _exchange(face_lo, face_hi, axis_name: str, n: int):
+    """Bidirectional nearest-neighbor exchange of two faces along one axis.
+
+    Returns ``(from_lo, from_hi)``: the lower neighbor's high face and the
+    upper neighbor's low face.  Edge shards receive zeros (Dirichlet).
+    """
+    if n == 1:
+        return jnp.zeros_like(face_hi), jnp.zeros_like(face_lo)
+    fwd = [(i, i + 1) for i in range(n - 1)]
+    bwd = [(i + 1, i) for i in range(n - 1)]
+    from_lo = jax.lax.ppermute(face_hi, axis_name, fwd)   # neighbor i-1 sent its high face
+    from_hi = jax.lax.ppermute(face_lo, axis_name, bwd)   # neighbor i+1 sent its low face
+    return from_lo, from_hi
+
+
+def halo_faces(v: jax.Array, fabric: FabricAxes):
+    """All neighbor faces of the local block, one ppermute pair per axis.
+
+    This is the communication phase of the paper's SpMV: 2 or 3 bidirectional
+    face exchanges, all independent, all overlappable with interior compute.
+    """
+    faces = {}
+    take = lambda a, sl: v[tuple(sl if i == a else slice(None) for i in range(v.ndim))]
+    faces["xm"], faces["xp"] = _exchange(take(0, slice(0, 1)), take(0, slice(-1, None)),
+                                         fabric.x, fabric.nx)
+    faces["ym"], faces["yp"] = _exchange(take(1, slice(0, 1)), take(1, slice(-1, None)),
+                                         fabric.y, fabric.ny)
+    if v.ndim == 3 and fabric.z is not None:
+        faces["zm"], faces["zp"] = _exchange(take(2, slice(0, 1)), take(2, slice(-1, None)),
+                                             fabric.z, fabric.nz)
+    return faces
+
+
+_AXIS_OF = {"xp": 0, "xm": 0, "yp": 1, "ym": 1, "zp": 2, "zm": 2}
+_SIGN_OF = {"xp": +1, "xm": -1, "yp": +1, "ym": -1, "zp": +1, "zm": -1}
+
+
+def local_apply(
+    coeffs: StencilCoeffs,
+    v: jax.Array,
+    fabric: FabricAxes,
+    *,
+    policy: Policy = F32,
+    overlap: bool = True,
+) -> jax.Array:
+    """Local shard of u = A v with halo exchange.  Runs inside shard_map.
+
+    ``overlap=False`` is the paper-faithful streaming form: each off-diagonal
+    term consumes a full shifted copy built by concatenating the received
+    face (the analogue of the CS-1 fabric streams feeding multiply threads).
+
+    ``overlap=True`` is the TPU-native form: interior shifts (which are pure
+    local compute) are accumulated first and each received face only patches
+    one boundary plane — the collective-permutes have a minimal dependent
+    region, so the scheduler can hide them under the interior work.
+    """
+    c = policy.compute
+    faces = halo_faces(v, fabric)
+    vc = v.astype(c)
+    u = vc  # unit main diagonal (Jacobi preconditioning)
+
+    for name, cf in coeffs.diags.items():
+        ax, sign = _AXIS_OF[name], _SIGN_OF[name]
+        cfc = cf.astype(c)
+        if name in faces:
+            face = faces[name].astype(c)
+            if overlap:
+                u = u + cfc * _shift(vc, ax, sign)
+                # patch the single boundary plane that needed the halo
+                sl = tuple(
+                    (slice(-1, None) if sign > 0 else slice(0, 1)) if i == ax else slice(None)
+                    for i in range(v.ndim)
+                )
+                u = u.at[sl].add(cfc[sl] * face)
+            else:
+                if sign > 0:
+                    shifted = jnp.concatenate([_take_rest(vc, ax, 1), face], axis=ax)
+                else:
+                    shifted = jnp.concatenate([face, _take_rest(vc, ax, -1)], axis=ax)
+                u = u + cfc * shifted
+        else:
+            # Z unsplit (single pod) or 2D: pure local shift, zero-Dirichlet.
+            u = u + cfc * _shift(vc, ax, sign)
+    return u.astype(policy.storage)
+
+
+def _take_rest(v: jax.Array, axis: int, sign: int) -> jax.Array:
+    sl = slice(1, None) if sign > 0 else slice(0, -1)
+    return v[tuple(sl if i == axis else slice(None) for i in range(v.ndim))]
+
+
+# ---------------------------------------------------------------------------
+# Reductions (paper §IV-3: AllReduce for the BiCGStab inner products)
+# ---------------------------------------------------------------------------
+
+def fused_dots(pairs, axis_names, policy: Policy) -> jax.Array:
+    """k inner products in ONE AllReduce (beyond-paper batching).
+
+    Local FMAC-style partials (bf16 products, f32 accumulation — paper
+    Table I's mixed column) are stacked into a length-k f32 vector and
+    reduced with a single ``psum``, replacing k blocking AllReduces with one.
+    """
+    partials = jnp.stack([policy.dot(a, b) for a, b in pairs])
+    return jax.lax.psum(partials, axis_names)
+
+
+def separate_dots(pairs, axis_names, policy: Policy) -> jax.Array:
+    """Paper-faithful: one blocking AllReduce per inner product."""
+    return jnp.stack([jax.lax.psum(policy.dot(a, b), axis_names) for a, b in pairs])
+
+
+def make_dots(fabric: FabricAxes, *, fused: bool = True):
+    """Reduction callable ``dots(pairs, policy) -> f32[k]`` over the fabric."""
+    names = tuple(a for a in (fabric.x, fabric.y, fabric.z) if a is not None)
+    fn = fused_dots if fused else separate_dots
+    return lambda pairs, policy: fn(pairs, names, policy)
+
+
+def global_apply(mesh, coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32,
+                 overlap: bool = True) -> jax.Array:
+    """Convenience wrapper: one distributed SpMV on global arrays."""
+    fabric = FabricAxes.from_mesh(mesh)
+    spec = fabric.spec(v.ndim)
+
+    def fn(cf, vv):
+        return local_apply(cf, vv, fabric, policy=policy, overlap=overlap)
+
+    return jax.shard_map(fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec)(coeffs, v)

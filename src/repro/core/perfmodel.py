@@ -1,0 +1,94 @@
+"""Analytic performance model for the distributed BiCGStab iteration
+(paper §V's model, re-derived for the TPU roofline).
+
+The paper validates a simple model: iteration time = compute at the vector
+unit rate + communication at the fabric rate, with the AllReduce adding a
+diameter-bound latency.  On TPU the same three terms are:
+
+  t_compute    = 44 flops/pt * pts_per_chip / peak
+  t_memory     = words/pt * itemsize * pts_per_chip / HBM_bw
+                 (words/pt = 42: 2 SpMV sweeps reading 6 diagonals + iterate
+                  + writing result, 6 AXPY r/w sweeps, 4 dot reads — §IV's
+                  10-vector working set traffic)
+  t_collective = halo faces (4 or 6 per SpMV, 2 SpMV) / link_bw
+                 + n_reductions * allreduce_latency(mesh)
+
+and the iteration is bound by max(compute, memory) + collective (halos can
+overlap interior compute; the blocking reductions cannot — the paper's
+explicit design choice, §IV-3).
+"""
+
+from __future__ import annotations
+
+import math
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HOP_LATENCY_S = 1e-6          # per-hop ICI latency (~us class)
+FLOPS_PER_PT = 44.0
+WORDS_PER_PT = 42.0
+
+
+def allreduce_latency(px: int, py: int, pz: int = 1) -> float:
+    """Latency-optimal AllReduce on a (px, py[, pz]) torus: ~2x diameter hops
+    (reduce + broadcast), the paper's Fig. 6 scheme."""
+    diameter = (px // 2) + (py // 2) + (pz // 2)
+    return 2.0 * diameter * HOP_LATENCY_S
+
+
+def iteration_time_model(mesh_shape, chips: int, *, itemsize: int = 2,
+                         fused_reductions: bool = True,
+                         fused_sweeps: bool = False,
+                         pods: int = 1) -> dict:
+    """Predicted BiCGStab iteration time for an X*Y*Z mesh on `chips` chips.
+
+    ``fused_sweeps`` models the Pallas fused-iteration kernels (words/pt 42
+    -> 28: SpMV+dot and AXPY+dot single passes, see kernels/fused_iter).
+    """
+    X, Y, Z = mesh_shape
+    per_pod = chips // pods
+    px = py = int(math.sqrt(per_pod))
+    pts_chip = X * Y * Z / chips
+    words = 28.0 if fused_sweeps else WORDS_PER_PT
+
+    t_comp = FLOPS_PER_PT * pts_chip / PEAK_FLOPS
+    t_mem = words * itemsize * pts_chip / HBM_BW
+
+    # halos: 2 SpMVs x 4 faces of (block_y*Z or block_x*Z) + pod Z-faces
+    bx, by = X / px, Y / py
+    face_words = 2 * ((bx + by) * (Z / pods)) * 2  # both directions, per spmv
+    if pods > 1:
+        face_words += 2 * (bx * by) * 2
+    t_halo = 2 * face_words * itemsize / LINK_BW
+    n_red = 3 if fused_reductions else 5
+    t_red = n_red * allreduce_latency(px, py, pods)
+
+    # halos overlap interior compute (overlap=True path); only the fraction
+    # the interior cannot hide is exposed
+    t_interior = max(t_comp, t_mem)
+    t_halo_exposed = max(0.0, t_halo - t_interior)
+    t_iter = t_interior + t_red + t_halo_exposed
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_halo_s": t_halo,
+        "t_reduce_s": t_red,
+        "t_iter_s": t_iter,
+        "bound": "memory" if t_mem >= t_comp else "compute",
+    }
+
+
+def mfix_timesteps_per_second(mesh_shape, chips: int, *,
+                              simple_iters: int = 15,
+                              mom_solver_iters: int = 5,
+                              cont_solver_iters: int = 20) -> float:
+    """Paper §VI-A projection: SIMPLE wall time from the iteration model +
+    Table II's matrix-forming cost (~2 us per Z-meshpoint per timestep on
+    CS-1; here scaled by the memory roofline of forming ~7-point systems)."""
+    solve_iters = simple_iters * (3 * mom_solver_iters + cont_solver_iters)
+    t_iter = iteration_time_model(mesh_shape, chips)["t_iter_s"]
+    # forming: Table II total 165-364 cycles/pt -> ~60 memory words/pt
+    X, Y, Z = mesh_shape
+    t_form = simple_iters * 4 * 60 * 2 * (X * Y * Z / chips) / HBM_BW
+    return 1.0 / (solve_iters * t_iter + t_form)

@@ -1,0 +1,67 @@
+"""Floating-point precision policies (paper §IV-3, §VI-B, Table I).
+
+The CS-1 runs the solver in fp16 with a hardware FMAC that multiplies in
+fp16 and accumulates in fp32 without rounding the product.  TPUs have no
+fast IEEE-fp16 path; the native 16-bit type is bfloat16, so the adapted
+policy is:
+
+* ``storage``  — dtype of the distributed state (x, r, p, q, s, y, coeffs)
+* ``compute``  — dtype of elementwise work (stencil products, AXPYs)
+* ``reduce``   — dtype of inner-product accumulation and of the AllReduce
+
+``MIXED`` reproduces the paper's half/single split (Table I: 18 HP adds,
+22 HP muls, 4 SP adds per meshpoint per iteration); ``F32`` is the paper's
+single-precision reference; ``BF16_PURE`` is the all-16-bit ablation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    storage: jnp.dtype
+    compute: jnp.dtype
+    reduce: jnp.dtype
+
+    def cast_storage(self, tree):
+        return jax.tree.map(lambda a: a.astype(self.storage), tree)
+
+    def dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Local inner product with the paper's FMAC semantics.
+
+        Products are formed from ``compute``-dtype operands but accumulated in
+        ``reduce`` dtype without intermediate rounding — the exact analogue of
+        the CS-1 FMAC ("no rounding of the product prior to the add") is
+        ``dot_general`` with ``preferred_element_type``.
+        """
+        a = a.astype(self.compute).reshape(-1)
+        b = b.astype(self.compute).reshape(-1)
+        return jax.lax.dot_general(
+            a, b, (((0,), (0,)), ((), ())),
+            preferred_element_type=self.reduce,
+        )
+
+    def norm2(self, a: jax.Array) -> jax.Array:
+        """||a||^2 with reduce-dtype accumulation."""
+        return self.dot(a, a)
+
+
+F32 = Policy("f32", jnp.dtype(jnp.float32), jnp.dtype(jnp.float32), jnp.dtype(jnp.float32))
+MIXED = Policy("bf16_mixed", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32))
+BF16_PURE = Policy("bf16_pure", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16))
+F64 = Policy("f64", jnp.dtype(jnp.float64), jnp.dtype(jnp.float64), jnp.dtype(jnp.float64))
+
+POLICIES = {p.name: p for p in (F32, MIXED, BF16_PURE)}
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}") from None

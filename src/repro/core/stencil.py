@@ -1,0 +1,229 @@
+"""7-point (3D) and 5-point (2D) stencil operators (paper §IV).
+
+The matrix ``A`` of the discretized PDE has seven nonzero diagonals; after
+diagonal (Jacobi) preconditioning the main diagonal is all ones, so only the
+six off-diagonals are stored (paper: "we only store six other diagonals").
+Coefficients are stored as one mesh-shaped array per diagonal, exactly the
+per-core layout of Listing 1 (xp, xm, yp, ym, zp, zm) generalized from one
+Z-pencil per core to one sub-volume per chip.
+
+Boundary semantics are zero-Dirichlet: a shift that crosses the mesh edge
+contributes zero (on CS-1 this was achieved by zero-padding the local
+arrays; here by zero-fill of ``ppermute`` at fabric edges / ``jnp.pad``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import Policy, F32
+
+# Order matters and is shared with the Pallas kernel and the dense builder.
+DIAGS_3D = ("xp", "xm", "yp", "ym", "zp", "zm")
+DIAGS_2D = ("xp", "xm", "yp", "ym")
+
+# Offset (in mesh coordinates) of the neighbor each diagonal reads.
+OFFSETS = {
+    "xp": (1, 0, 0), "xm": (-1, 0, 0),
+    "yp": (0, 1, 0), "ym": (0, -1, 0),
+    "zp": (0, 0, 1), "zm": (0, 0, -1),
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StencilCoeffs:
+    """Off-diagonal coefficient fields of a unit-diagonal stencil matrix.
+
+    ``diags[name]`` has the mesh shape; entry ``diags['xp'][i,j,k]`` multiplies
+    ``v[i+1,j,k]`` when computing row ``(i,j,k)`` of ``A @ v``.
+    """
+
+    diags: dict[str, jax.Array]
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self.diags)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return next(iter(self.diags.values())).shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return next(iter(self.diags.values())).dtype
+
+    def astype(self, dtype) -> "StencilCoeffs":
+        return StencilCoeffs({k: v.astype(dtype) for k, v in self.diags.items()})
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.diags))
+        return tuple(self.diags[k] for k in keys), keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, values):
+        return cls(dict(zip(keys, values)))
+
+
+def _shift(v: jax.Array, axis: int, offset: int) -> jax.Array:
+    """v shifted so result[i] = v[i + offset] along ``axis``; zero fill."""
+    if offset == 0:
+        return v
+    pad = [(0, 0)] * v.ndim
+    if offset > 0:
+        pad[axis] = (0, offset)
+        return jnp.pad(v, pad)[
+            tuple(slice(offset, None) if a == axis else slice(None) for a in range(v.ndim))
+        ]
+    pad[axis] = (-offset, 0)
+    return jnp.pad(v, pad)[
+        tuple(slice(0, offset) if a == axis else slice(None) for a in range(v.ndim))
+    ]
+
+
+def apply_ref(coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32) -> jax.Array:
+    """Reference (single-address-space) u = A v.  Oracle for everything else.
+
+    Follows the paper's arithmetic: the products and the 6 accumulating adds
+    run in ``policy.compute`` (Table I counts these as half precision in the
+    mixed policy); the unit diagonal contributes ``v`` directly.
+    """
+    c = policy.compute
+    u = v.astype(c)
+    for name, cf in coeffs.diags.items():
+        off = OFFSETS[name][: v.ndim]
+        axis = next(i for i, o in enumerate(off) if o != 0)
+        u = u + cf.astype(c) * _shift(v, axis, off[axis]).astype(c)
+    return u.astype(policy.storage)
+
+
+def to_dense(coeffs: StencilCoeffs) -> np.ndarray:
+    """Materialize A as a dense (N, N) float64 matrix (small meshes only)."""
+    shape = coeffs.shape
+    n = int(np.prod(shape))
+    A = np.eye(n, dtype=np.float64)
+    idx = np.arange(n).reshape(shape)
+    for name, cf in coeffs.diags.items():
+        cf = np.asarray(cf, dtype=np.float64)
+        off = OFFSETS[name][: len(shape)]
+        src = idx
+        for ax, o in enumerate(off):
+            src = np.roll(src, -o, axis=ax)
+        # zero out rows whose neighbor crosses the boundary
+        valid = np.ones(shape, dtype=bool)
+        for ax, o in enumerate(off):
+            if o == 1:
+                sl = [slice(None)] * len(shape)
+                sl[ax] = slice(-1, None)
+                valid[tuple(sl)] = False
+            elif o == -1:
+                sl = [slice(None)] * len(shape)
+                sl[ax] = slice(0, 1)
+                valid[tuple(sl)] = False
+        rows = idx[valid].ravel()
+        cols = src[valid].ravel()
+        A[rows, cols] += cf[valid].ravel()
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Problem generators
+# ---------------------------------------------------------------------------
+
+def poisson(shape: tuple[int, ...], dtype=jnp.float32) -> StencilCoeffs:
+    """Jacobi-preconditioned 7-point (or 5-point) Laplacian.
+
+    The raw operator has diagonal ``2*ndim`` and off-diagonals ``-1``;
+    preconditioning by the diagonal gives unit diagonal and ``-1/(2*ndim)``
+    off-diagonals — symmetric positive definite, the classic model problem.
+    """
+    names = DIAGS_3D if len(shape) == 3 else DIAGS_2D
+    c = -1.0 / (2 * len(shape))
+    return StencilCoeffs({n: jnp.full(shape, c, dtype=dtype) for n in names})
+
+
+def random_nonsymmetric(
+    key: jax.Array,
+    shape: tuple[int, ...],
+    dtype=jnp.float32,
+    *,
+    dominance: float = 1.25,
+) -> StencilCoeffs:
+    """Random nonsymmetric diagonally-dominant stencil (BiCGStab's habitat).
+
+    Off-diagonal magnitudes sum to ``1/dominance`` per row so the Jacobi-
+    preconditioned matrix is strictly diagonally dominant => BiCGStab
+    converges.  Signs are random => A is nonsymmetric, like the upwinded
+    convection-diffusion systems MFIX produces (paper §VI).
+    """
+    names = DIAGS_3D if len(shape) == 3 else DIAGS_2D
+    keys = jax.random.split(key, len(names) + 1)
+    mags = {
+        n: jax.random.uniform(k, shape, jnp.float32, 0.05, 1.0)
+        for n, k in zip(names, keys[:-1])
+    }
+    total = sum(mags.values())
+    signs = {
+        n: jnp.where(jax.random.bernoulli(k, 0.5, shape), 1.0, -1.0)
+        for n, k in zip(names, jax.random.split(keys[-1], len(names)))
+    }
+    return StencilCoeffs(
+        {n: (signs[n] * mags[n] / (dominance * total)).astype(dtype) for n in names}
+    )
+
+
+def convection_diffusion(
+    shape: tuple[int, ...],
+    dtype=jnp.float32,
+    *,
+    peclet: float = 5.0,
+) -> StencilCoeffs:
+    """Upwinded convection-diffusion operator, Jacobi preconditioned.
+
+    A deterministic nonsymmetric model of the paper's momentum equations:
+    diffusion contributes -1 per face; a constant velocity field (1, 0.5,
+    0.25) upwinds the convection term with cell Peclet number ``peclet``.
+    """
+    ndim = len(shape)
+    vel = (1.0, 0.5, 0.25)[:ndim]
+    names = DIAGS_3D if ndim == 3 else DIAGS_2D
+    raw: dict[str, float] = {}
+    diag = 0.0
+    for ax, name_pair in enumerate(zip(names[0::2], names[1::2])):
+        plus, minus = name_pair
+        conv = peclet * vel[ax]
+        # first-order upwind: flow in +ax direction biases the -ax neighbor
+        raw[plus] = -1.0
+        raw[minus] = -1.0 - conv
+        diag += 2.0 + conv
+    return StencilCoeffs(
+        {n: jnp.full(shape, raw[n] / diag, dtype=dtype) for n in names}
+    )
+
+
+def rhs_for_solution(coeffs: StencilCoeffs, x_true: jax.Array) -> jax.Array:
+    """b = A @ x_true in float64-ish (f32) precision, for manufactured tests."""
+    return apply_ref(coeffs.astype(jnp.float32), x_true.astype(jnp.float32))
+
+
+def flops_per_point(ndim: int = 3) -> int:
+    """SpMV flops per meshpoint: 6 mul + 6 add (3D, unit diagonal) = 12.
+
+    Matches Table I: Matvec x2 per iteration = 24 of the 44 ops/meshpoint.
+    """
+    n_off = 2 * ndim
+    return 2 * n_off
+
+
+def words_per_point(ndim: int = 3) -> int:
+    """Memory words touched per meshpoint per SpMV: 6 coeffs + v + u."""
+    return 2 * ndim + 2

@@ -1,0 +1,4 @@
+from repro.kernels.fused_iter.ops import (  # noqa: F401
+    dot_mixed, update_p, update_q_dots, update_xr_dots,
+)
+from repro.kernels.fused_iter import ref  # noqa: F401

@@ -1,0 +1,149 @@
+"""Fused BiCGStab vector-update + inner-product Pallas kernels.
+
+The paper's iteration sweeps the per-core state ~13 times (2 SpMV reads x 8
+vectors, 6 AXPYs, 4 dots).  On TPU the memory roofline term is exactly
+proportional to those sweeps, so we fuse each "update then dot" pair into a
+single pass (the CS-1 analogue: its AXPYs and dot products were separate
+tensor instructions but all operands already lived in SRAM; on TPU the state
+lives in HBM and fusion is where the paper's SRAM-residency advantage must be
+re-earned — DESIGN.md §2).
+
+All kernels run on a (rows, 128)-tiled flattening of the mesh block with
+f32 scalar accumulators carried across sequential grid steps (TPU grid
+iterations execute in order, so += into a (1,1) output block is sound; same
+semantics in interpret mode).
+
+Precision: products in the storage dtype (bf16), accumulation in f32 — the
+paper's FMAC discipline (Table I mixed column).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_spec(bm):
+    return pl.BlockSpec((bm, 128), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _acc_init(i, *refs):
+    @pl.when(i == 0)
+    def _():
+        for r in refs:
+            r[...] = jnp.zeros_like(r)
+
+
+# --- q = r - alpha*s ; partials <q,y>, <y,y> ------------------------------
+
+def _update_q_kernel(alpha_ref, r_ref, s_ref, y_ref, q_ref, qy_ref, yy_ref):
+    i = pl.program_id(0)
+    _acc_init(i, qy_ref, yy_ref)
+    alpha = alpha_ref[0, 0]
+    q = r_ref[...] - (alpha.astype(r_ref.dtype) * s_ref[...])
+    q_ref[...] = q
+    yf = y_ref[...].astype(jnp.float32)
+    qy_ref[...] += jnp.sum(q.astype(jnp.float32) * yf).reshape(1, 1)
+    yy_ref[...] += jnp.sum(yf * yf).reshape(1, 1)
+
+
+def update_q_dots_pallas(alpha, r, s, y, *, bm: int, interpret: bool = True):
+    M = r.shape[0]
+    grid = (M // bm,)
+    return pl.pallas_call(
+        _update_q_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec(), _row_spec(bm), _row_spec(bm), _row_spec(bm)],
+        out_specs=[_row_spec(bm), _scalar_spec(), _scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha.reshape(1, 1).astype(jnp.float32), r, s, y)
+
+
+# --- x += alpha*p + omega*q ; r = q - omega*y ; <r0,r>, <r,r> --------------
+
+def _update_xr_kernel(ab_ref, x_ref, p_ref, q_ref, y_ref, r0_ref,
+                      xo_ref, ro_ref, r0r_ref, rr_ref):
+    i = pl.program_id(0)
+    _acc_init(i, r0r_ref, rr_ref)
+    alpha = ab_ref[0, 0].astype(x_ref.dtype)
+    omega = ab_ref[0, 1].astype(x_ref.dtype)
+    q = q_ref[...]
+    xo_ref[...] = x_ref[...] + alpha * p_ref[...] + omega * q
+    r = q - omega * y_ref[...]
+    ro_ref[...] = r
+    rf = r.astype(jnp.float32)
+    r0r_ref[...] += jnp.sum(r0_ref[...].astype(jnp.float32) * rf).reshape(1, 1)
+    rr_ref[...] += jnp.sum(rf * rf).reshape(1, 1)
+
+
+def update_xr_dots_pallas(alpha, omega, x, p, q, y, r0, *, bm: int,
+                          interpret: bool = True):
+    M = x.shape[0]
+    ab = jnp.stack([alpha, omega]).reshape(1, 2).astype(jnp.float32)
+    return pl.pallas_call(
+        _update_xr_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0))] + [_row_spec(bm)] * 5,
+        out_specs=[_row_spec(bm), _row_spec(bm), _scalar_spec(), _scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ab, x, p, q, y, r0)
+
+
+# --- p = r + beta*(p - omega*s) -------------------------------------------
+
+def _update_p_kernel(bo_ref, r_ref, p_ref, s_ref, po_ref):
+    beta = bo_ref[0, 0].astype(p_ref.dtype)
+    omega = bo_ref[0, 1].astype(p_ref.dtype)
+    po_ref[...] = r_ref[...] + beta * (p_ref[...] - omega * s_ref[...])
+
+
+def update_p_pallas(beta, omega, r, p, s, *, bm: int, interpret: bool = True):
+    M = r.shape[0]
+    bo = jnp.stack([beta, omega]).reshape(1, 2).astype(jnp.float32)
+    return pl.pallas_call(
+        _update_p_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0))] + [_row_spec(bm)] * 3,
+        out_specs=_row_spec(bm),
+        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        interpret=interpret,
+    )(bo, r, p, s)
+
+
+# --- plain mixed-precision dot --------------------------------------------
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+    _acc_init(i, o_ref)
+    prod = (a_ref[...] * b_ref[...]).astype(jnp.float32)   # bf16 multiply, f32 add
+    o_ref[...] += jnp.sum(prod).reshape(1, 1)
+
+
+def dot_mixed_pallas(a, b, *, bm: int, interpret: bool = True):
+    M = a.shape[0]
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(M // bm,),
+        in_specs=[_row_spec(bm), _row_spec(bm)],
+        out_specs=_scalar_spec(),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,66 @@
+"""jit'd wrappers: flatten the mesh block to (rows, 128), pad, dispatch, and
+reshape back.  Zero padding is exact for every fused op (pads contribute 0 to
+dots and are sliced off the vector outputs)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+DEFAULT_BM = 512
+
+
+def _to_rows(a: jax.Array):
+    n = a.size
+    rows = -(-n // LANES)
+    bm = min(DEFAULT_BM, rows)
+    rows_pad = -(-rows // bm) * bm
+    flat = jnp.pad(a.reshape(-1), (0, rows_pad * LANES - n))
+    return flat.reshape(rows_pad, LANES), bm
+
+
+def _like(flat: jax.Array, a: jax.Array):
+    return flat.reshape(-1)[: a.size].reshape(a.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def update_q_dots(alpha, r, s, y, *, interpret: bool = True):
+    from repro.kernels.fused_iter.kernel import update_q_dots_pallas
+    r2, bm = _to_rows(r)
+    s2, _ = _to_rows(s)
+    y2, _ = _to_rows(y)
+    q2, qy, yy = update_q_dots_pallas(jnp.asarray(alpha), r2, s2, y2,
+                                      bm=bm, interpret=interpret)
+    return _like(q2, r), qy[0, 0], yy[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def update_xr_dots(alpha, omega, x, p, q, y, r0, *, interpret: bool = True):
+    from repro.kernels.fused_iter.kernel import update_xr_dots_pallas
+    arrs = [_to_rows(a)[0] for a in (x, p, q, y, r0)]
+    bm = _to_rows(x)[1]
+    xo, ro, r0r, rr = update_xr_dots_pallas(
+        jnp.asarray(alpha), jnp.asarray(omega), *arrs, bm=bm, interpret=interpret)
+    return _like(xo, x), _like(ro, x), r0r[0, 0], rr[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def update_p(beta, omega, r, p, s, *, interpret: bool = True):
+    from repro.kernels.fused_iter.kernel import update_p_pallas
+    r2, bm = _to_rows(r)
+    p2, _ = _to_rows(p)
+    s2, _ = _to_rows(s)
+    po = update_p_pallas(jnp.asarray(beta), jnp.asarray(omega), r2, p2, s2,
+                         bm=bm, interpret=interpret)
+    return _like(po, r)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot_mixed(a, b, *, interpret: bool = True):
+    from repro.kernels.fused_iter.kernel import dot_mixed_pallas
+    a2, bm = _to_rows(a)
+    b2, _ = _to_rows(b)
+    return dot_mixed_pallas(a2, b2, bm=bm, interpret=interpret)[0, 0]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the fused_iter kernels (paper FMAC semantics:
+storage-dtype elementwise ops, f32 dot accumulation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _dot(a, b):
+    return jnp.sum((a * b).astype(jnp.float32))
+
+
+def update_q_dots_ref(alpha, r, s, y):
+    q = r - alpha.astype(r.dtype) * s
+    return q, _dot(q, y), _dot(y, y)
+
+
+def update_xr_dots_ref(alpha, omega, x, p, q, y, r0):
+    a, w = alpha.astype(x.dtype), omega.astype(x.dtype)
+    x_new = x + a * p + w * q
+    r_new = q - w * y
+    return x_new, r_new, _dot(r0, r_new), _dot(r_new, r_new)
+
+
+def update_p_ref(beta, omega, r, p, s):
+    b, w = beta.astype(p.dtype), omega.astype(p.dtype)
+    return r + b * (p - w * s)
+
+
+def dot_mixed_ref(a, b):
+    return _dot(a, b)

@@ -1,0 +1,2 @@
+from repro.kernels.stencil7.ops import stencil7_apply  # noqa: F401
+from repro.kernels.stencil7.ref import stencil7_ref  # noqa: F401

@@ -1,0 +1,92 @@
+"""SpMV with fused inner-product epilogues — the remaining pieces of the
+fused-iteration schedule (EXPERIMENTS.md §Perf, stencil v3).
+
+Two variants used by the BiCGStab iteration:
+  * ``stencil7_dot``      : s = A p  and  <r0, s>       (sync point 1 feed)
+  * ``stencil7_two_dots`` : y = A q  and  <q, y>, <y, y> (sync point 2 feed)
+
+Fusing the dot into the SpMV's write-out pass removes a full re-read of the
+freshly written vector (and of the second operand), cutting the iteration's
+per-point traffic from 42 to 31 words (see kernels/fused_iter for the AXPY
+fusions).  Dots accumulate in f32 across sequential grid steps (paper FMAC
+discipline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.stencil import StencilCoeffs
+from repro.kernels.stencil7.ops import ORDER, pick_zc
+
+
+def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,
+            u_ref, d1_ref, d2_ref, *, accum_dtype, two_dots):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        d1_ref[...] = jnp.zeros_like(d1_ref)
+        d2_ref[...] = jnp.zeros_like(d2_ref)
+
+    vp = vp_ref[...]
+    c = lambda a: a.astype(accum_dtype)
+    u = c(vp[1:-1, 1:-1, 1:-1])
+    u += c(xp_ref[...]) * c(vp[2:, 1:-1, 1:-1])
+    u += c(xm_ref[...]) * c(vp[:-2, 1:-1, 1:-1])
+    u += c(yp_ref[...]) * c(vp[1:-1, 2:, 1:-1])
+    u += c(ym_ref[...]) * c(vp[1:-1, :-2, 1:-1])
+    u += c(zp_ref[...]) * c(vp[1:-1, 1:-1, 2:])
+    u += c(zm_ref[...]) * c(vp[1:-1, 1:-1, :-2])
+    u_ref[...] = u.astype(u_ref.dtype)
+    # epilogue: dots against w (= r0 or q) and optionally u itself, in f32
+    uf = u.astype(jnp.float32)
+    wf = w_ref[...].astype(jnp.float32)
+    d1_ref[...] += jnp.sum(wf * uf).reshape(1, 1)
+    if two_dots:
+        d2_ref[...] += jnp.sum(uf * uf).reshape(1, 1)
+
+
+def _call(coeffs: StencilCoeffs, v: jax.Array, w: jax.Array, *, two_dots: bool,
+          accum_dtype=jnp.float32, interpret: bool = True):
+    bx, by, Z = v.shape
+    zc = pick_zc(bx, by, Z, jnp.dtype(v.dtype).itemsize)
+    vp = jnp.pad(v, ((1, 1), (1, 1), (1, 1)))
+    vspec = pl.BlockSpec(
+        (pl.Element(bx + 2), pl.Element(by + 2), pl.Element(zc + 2)),
+        lambda i: (0, 0, i * zc))
+    cspec = pl.BlockSpec((bx, by, zc), lambda i: (0, 0, i))
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    u, d1, d2 = pl.pallas_call(
+        functools.partial(_kernel, accum_dtype=accum_dtype, two_dots=two_dots),
+        grid=(Z // zc,),
+        in_specs=[vspec, cspec] + [cspec] * 6,
+        out_specs=[cspec, sspec, sspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx, by, Z), v.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vp, w, *[coeffs.diags[n] for n in ORDER])
+    return u, d1[0, 0], d2[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stencil7_dot(coeffs: StencilCoeffs, p: jax.Array, r0: jax.Array, *,
+                 interpret: bool = True):
+    """s = A p, <r0, s> in one pass. Returns (s, r0s_partial)."""
+    s, d1, _ = _call(coeffs, p, r0, two_dots=False, interpret=interpret)
+    return s, d1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stencil7_two_dots(coeffs: StencilCoeffs, q: jax.Array, *,
+                      interpret: bool = True):
+    """y = A q, <q, y>, <y, y> in one pass. Returns (y, qy, yy)."""
+    y, qy, yy = _call(coeffs, q, q, two_dots=True, interpret=interpret)
+    return y, qy, yy

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the stencil7 kernel: identical to core.stencil.apply_ref
+restricted to a local (zero-Dirichlet) block."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _shift(v, axis, off):
+    pad = [(0, 0)] * v.ndim
+    if off > 0:
+        pad[axis] = (0, off)
+        sl = [slice(None)] * v.ndim
+        sl[axis] = slice(off, None)
+    else:
+        pad[axis] = (-off, 0)
+        sl = [slice(None)] * v.ndim
+        sl[axis] = slice(0, off)
+    return jnp.pad(v, pad)[tuple(sl)]
+
+
+def stencil7_ref(v: jax.Array, coeffs: list[jax.Array],
+                 accum_dtype=jnp.float32) -> jax.Array:
+    """coeffs order: xp, xm, yp, ym, zp, zm (matches the kernel)."""
+    xp, xm, yp, ym, zp, zm = [c.astype(accum_dtype) for c in coeffs]
+    vc = v.astype(accum_dtype)
+    u = vc
+    u = u + xp * _shift(vc, 0, +1)
+    u = u + xm * _shift(vc, 0, -1)
+    u = u + yp * _shift(vc, 1, +1)
+    u = u + ym * _shift(vc, 1, -1)
+    u = u + zp * _shift(vc, 2, +1)
+    u = u + zm * _shift(vc, 2, -1)
+    return u.astype(v.dtype)

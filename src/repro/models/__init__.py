@@ -1,0 +1,8 @@
+"""LM model zoo sharing the stencil framework's distribution substrate.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays; every parameter
+is declared once as a :class:`repro.models.param.ParamDef` carrying its
+logical sharding axes, from which both real initialization (smoke tests)
+and abstract ``ShapeDtypeStruct`` trees with ``NamedSharding`` (dry-run)
+are derived.
+"""

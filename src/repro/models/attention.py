@@ -1,0 +1,174 @@
+"""GQA attention block: projections + RoPE + flash/decode attention + cache.
+
+Supports: grouped KV heads (kv=1..32), QKV bias (qwen2), sliding windows
+(gemma3 5:1 local:global), prefix-LM masking (paligemma), cross-attention
+(whisper decoder), logit softcap (grok), and sequence-sharded KV caches for
+the decode/long shapes (the ``kv_seq`` logical axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+from repro.models.layers import flash_attention, decode_attention, rope
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["k", "v", "length"], meta_fields=[],
+)
+@dataclasses.dataclass
+class AttnCache:
+    k: jax.Array          # (B, S, K, D)
+    v: jax.Array          # (B, S, K, D)
+    length: jax.Array     # int32 scalar: number of valid positions
+
+
+def init_cache(batch: int, max_len: int, n_kv: int, d_head: int,
+               dtype=jnp.bfloat16) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+        v=jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_cache(batch: int, max_len: int, n_kv: int, d_head: int,
+                   dtype=jnp.bfloat16) -> AttnCache:
+    return AttnCache(
+        k=jax.ShapeDtypeStruct((batch, max_len, n_kv, d_head), dtype),
+        v=jax.ShapeDtypeStruct((batch, max_len, n_kv, d_head), dtype),
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def build_params(d_model: int, n_heads: int, n_kv: int, d_head: int, *,
+                 qkv_bias: bool = False, cross: bool = False,
+                 dtype=jnp.bfloat16) -> dict:
+    p = {
+        "wq": ParamDef((d_model, n_heads, d_head), ("d_model", "heads", "head_dim"), dtype=dtype),
+        "wk": ParamDef((d_model, n_kv, d_head), ("d_model", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": ParamDef((d_model, n_kv, d_head), ("d_model", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": ParamDef((n_heads, d_head, d_model), ("heads", "head_dim", "d_model"), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = ParamDef((n_heads, d_head), ("heads", "head_dim"), init="zeros", dtype=dtype)
+        p["bk"] = ParamDef((n_kv, d_head), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+        p["bv"] = ParamDef((n_kv, d_head), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+    if cross:
+        p["c_wq"] = ParamDef((d_model, n_heads, d_head), ("d_model", "heads", "head_dim"), dtype=dtype)
+        p["c_wk"] = ParamDef((d_model, n_kv, d_head), ("d_model", "kv_heads", "head_dim"), dtype=dtype)
+        p["c_wv"] = ParamDef((d_model, n_kv, d_head), ("d_model", "kv_heads", "head_dim"), dtype=dtype)
+        p["c_wo"] = ParamDef((n_heads, d_head, d_model), ("heads", "head_dim", "d_model"), dtype=dtype)
+    return p
+
+
+def _project(x, w, b=None):
+    out = jnp.einsum("btd,dhe->bthe", x, w)
+    return out + b[None, None] if b is not None else out
+
+
+def self_attention(
+    p: dict,
+    x: jax.Array,                       # (B, T, d)
+    *,
+    n_kv: int,
+    mode: str,                          # "train" | "prefill" | "decode"
+    cache: AttnCache | None = None,
+    positions: jax.Array | None = None, # (T,) absolute positions (train/prefill)
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    rope_theta: float | None = 1e4,
+    softcap: float | None = None,
+    block: int = 1024,
+    unroll: bool = False,
+):
+    """Returns (out (B,T,d), new_cache)."""
+    B, T, d = x.shape
+    H, Dh = p["wq"].shape[1], p["wq"].shape[2]
+    G = H // n_kv
+    q = _project(x, p["wq"], p.get("bq"))
+    k = _project(x, p["wk"], p.get("bk"))
+    v = _project(x, p["wv"], p.get("bv"))
+
+    if mode in ("train", "prefill"):
+        if positions is None:
+            positions = jnp.arange(T)
+        pos_b = jnp.broadcast_to(positions[None], (B, T))
+        if rope_theta is not None:
+            q = rope(q, pos_b, rope_theta)
+            k = rope(k, pos_b, rope_theta)
+        qg = q.reshape(B, T, n_kv, G, Dh)
+        if prefix_len > 0:
+            # prefix-LM: bidirectional inside the prefix, causal after
+            q_eff = jnp.maximum(positions, prefix_len - 1)
+        else:
+            q_eff = positions
+        o = flash_attention(qg, k, v, q_eff, positions, causal=causal,
+                            window=window, softcap=softcap, block=block,
+                            unroll=unroll)
+        new_cache = cache
+        if mode == "prefill":
+            assert cache is not None
+            S = cache.k.shape[1]
+            kpad = jnp.pad(k, ((0, 0), (0, S - T), (0, 0), (0, 0))) if S > T else k[:, :S]
+            vpad = jnp.pad(v, ((0, 0), (0, S - T), (0, 0), (0, 0))) if S > T else v[:, :S]
+            new_cache = AttnCache(kpad.astype(cache.k.dtype), vpad.astype(cache.v.dtype),
+                                  jnp.int32(min(T, S)))
+        out = jnp.einsum("bthe,hed->btd", o.reshape(B, T, H, Dh), p["wo"])
+        return out, new_cache
+
+    # decode: T == 1, append to cache then attend over the whole buffer
+    assert cache is not None and T == 1
+    pos = cache.length
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    if rope_theta is not None:
+        q = rope(q, pos_b, rope_theta)
+        k = rope(k, pos_b, rope_theta)
+    kc = _ring_update(cache.k, k, pos)
+    vc = _ring_update(cache.v, v, pos)
+    new_len = jnp.minimum(pos + 1, cache.k.shape[1])
+    o = decode_attention(q.reshape(B, 1, n_kv, G, Dh), kc, vc,
+                         cache_len=pos + 1, k_pos0=0, window=window, softcap=softcap)
+    out = jnp.einsum("bthe,hed->btd", o.reshape(B, 1, H, Dh), p["wo"])
+    return out, AttnCache(kc, vc, new_len)
+
+
+def _ring_update(buf: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one timestep into the cache at ``pos`` (dynamic, clamped)."""
+    pos = jnp.minimum(pos, buf.shape[1] - 1)
+    return jax.lax.dynamic_update_slice(
+        buf, val.astype(buf.dtype), (0, pos, 0, 0)
+    )
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,                        # (B, T, d) decoder stream
+    enc_kv: tuple[jax.Array, jax.Array],  # precomputed (k, v): (B, S_enc, K, Dh)
+    *,
+    n_kv: int,
+    block: int = 1024,
+    unroll: bool = False,
+):
+    """Whisper-style cross attention (no masking, no rope)."""
+    B, T, d = x.shape
+    H, Dh = p["c_wq"].shape[1], p["c_wq"].shape[2]
+    G = H // n_kv
+    q = _project(x, p["c_wq"]).reshape(B, T, n_kv, G, Dh)
+    k, v = enc_kv
+    S = k.shape[1]
+    o = flash_attention(q, k, v, jnp.arange(T), jnp.arange(S), causal=False,
+                        block=block, unroll=unroll)
+    return jnp.einsum("bthe,hed->btd", o.reshape(B, T, H, Dh), p["c_wo"])
+
+
+def encode_cross_kv(p: dict, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    return _project(enc_out, p["c_wk"]), _project(enc_out, p["c_wv"])

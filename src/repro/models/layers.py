@@ -1,0 +1,209 @@
+"""Shared NN layers: norms, RoPE, embeddings, GQA attention.
+
+Attention is written flash-style in pure JAX (lax.scan over KV blocks with
+online-softmax f32 accumulators) so that (a) the working set stays bounded
+at 32k-500k contexts — the dry-run must *fit* — and (b) the same code path
+lowers on CPU and TPU.  The Pallas kernels in repro.kernels are drop-in
+replacements for the inner block on real TPU hardware.
+
+Precision discipline follows the paper (§IV-3): 16-bit operands, f32
+accumulation for every long reduction (softmax stats, attention PV sums,
+norms, losses) — `preferred_element_type` everywhere a contraction feeds a
+running sum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def layernorm(w: jax.Array, b: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def groupnorm_heads(w: jax.Array, b: jax.Array, x: jax.Array, eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm (RWKV's ln_x / GroupNorm over heads). x: (..., H, D)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, T, H, D) with D even; positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (B,T,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    """(Tq, Tk) boolean mask block from absolute positions."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def flash_attention(
+    q: jax.Array,               # (B, Tq, K, G, D) grouped queries
+    k: jax.Array,               # (B, Tk, K, D)
+    v: jax.Array,               # (B, Tk, K, D)
+    q_pos: jax.Array,           # (Tq,) absolute positions
+    k_pos: jax.Array,           # (Tk,)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block: int = 1024,
+    softcap: float | None = None,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV blocks; f32 stats/accumulators.
+
+    ``unroll=True`` fully unrolls the KV loop (cost probes: XLA counts loop
+    bodies once, an unrolled graph is counted exactly)."""
+    B, Tq, K, G, D = q.shape
+    Tk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    block = min(block, Tk)
+    n_blocks = math.ceil(Tk / block)
+    pad = n_blocks * block - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10 ** 9))
+    kb = k.reshape(B, n_blocks, block, K, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block, K, D).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(n_blocks, block)
+
+    o0 = jnp.zeros((B, Tq, K, G, D), jnp.float32)
+    m0 = jnp.full((B, Tq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, K, G), jnp.float32)
+
+    def step(carry, blk):
+        o, m, l = carry
+        kc, vc, pc = blk
+        s = jnp.einsum("btkgd,bskd->btkgs", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _block_mask(q_pos, pc, causal=causal, window=window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("btkgs,bskd->btkgd", p.astype(v.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        o = o * corr[..., None] + pv
+        return (o, m_new, l), None
+
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), (kb, vb, pb),
+                                unroll=n_blocks if unroll else 1)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,               # (B, 1, K, G, D)
+    k_cache: jax.Array,         # (B, S, K, D)  (may be sequence-sharded)
+    v_cache: jax.Array,
+    cache_len: jax.Array,       # scalar or (B,) valid length
+    k_pos0: int | jax.Array,    # absolute position of cache slot 0
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) cache.
+
+    Written as masked global softmax in f32; when the cache's S axis carries
+    a mesh axis, XLA partitions the max/sum reductions into local partials
+    plus two scalar-ish AllReduces — exactly the paper's low-latency
+    AllReduce pattern (flash-decode for free via GSPMD).
+    """
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    D = q.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bokgd,bskd->bkgs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = k_pos0 + jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))     # (B or 1, S)
+    if window is not None:
+        q_pos = jnp.reshape(cache_len, (-1, 1)) - 1
+        valid &= pos[None, :] > (q_pos - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                   v_cache, preferred_element_type=jnp.float32)
+    return o[:, None].astype(q.dtype)   # (B, 1, K, G, D)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array, mask: jax.Array,
+                       *, z_loss: float = 1e-4):
+    """Next-token CE, vocab-shard-friendly. logits (B,T,V) stay 16-bit; the
+    max / sum-exp / gold-gather reductions over V are partial-per-shard plus
+    an AllReduce when V carries a mesh axis (the paper's reduction pattern);
+    the one-hot einsum replaces take_along_axis so GSPMD partitions cleanly.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)                  # max: exact in bf16
+    se = jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1)
+    lse = m[..., 0].astype(jnp.float32) + jnp.log(se)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("btv,btv->bt", logits, onehot,
+                      preferred_element_type=jnp.float32)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,126 @@
+"""Mamba (S6 selective SSM) block for Jamba's hybrid layers (arXiv:2312.00752,
+Jamba arXiv:2403.19887).
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        (diag A, per channel)
+    y_t = C_t . h_t + D x_t
+
+Train/prefill evaluates the diagonal linear recurrence with an associative
+scan over time (parallel, TPU-friendly); decode keeps O(1) state.  The
+``d_inner`` channel dimension carries the ``heads_flat`` logical axis so all
+per-channel work is tensor-parallel on the model axis; only the out-proj
+contraction AllReduces — same collective budget as a dense TP MLP.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+
+def build_params(d_model: int, *, d_state: int = 16, d_conv: int = 4,
+                 expand: int = 2, dt_rank: int | None = None,
+                 dtype=jnp.bfloat16) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or math.ceil(d_model / 16)
+    return {
+        "in_proj": ParamDef((d_model, 2 * d_inner), ("d_model", "heads_flat"), dtype=dtype),
+        "conv_w": ParamDef((d_conv, d_inner), ("conv", "heads_flat"), dtype=dtype),
+        "conv_b": ParamDef((d_inner,), ("heads_flat",), init="zeros", dtype=dtype),
+        "x_proj": ParamDef((d_inner, dt_rank + 2 * d_state), ("heads_flat", None), dtype=dtype),
+        "dt_w": ParamDef((dt_rank, d_inner), (None, "heads_flat"), dtype=dtype),
+        "dt_b": ParamDef((d_inner,), ("heads_flat",), init="ones", dtype=jnp.float32),
+        "A_log": ParamDef((d_inner, d_state), ("heads_flat", "state"), init="ones", dtype=jnp.float32),
+        "D": ParamDef((d_inner,), ("heads_flat",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamDef((d_inner, d_model), ("heads_flat", "d_model"), dtype=dtype),
+        "norm_w": ParamDef((d_inner,), ("heads_flat",), init="ones", dtype=jnp.float32),
+    }
+
+
+def _ssm_inputs(p, x):
+    """Shared front half: projections, conv, dt/B/C/A discretization."""
+    B_, T, _ = x.shape
+    d_inner = p["conv_b"].shape[0]
+    d_state = p["A_log"].shape[1]
+    dt_rank = p["dt_w"].shape[0]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    return xs, z, d_inner, d_state, dt_rank
+
+
+def _discretize(p, xs):
+    d_state = p["A_log"].shape[1]
+    dt_rank = p["dt_w"].shape[0]
+    proj = xs @ p["x_proj"]                                     # (B,T,R+2N)
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_in.astype(jnp.float32),
+                   p["dt_w"].astype(jnp.float32)) + p["dt_b"])       # (B,T,d_in) f32
+    A = -jnp.exp(p["A_log"])                                    # (d_in, N) f32
+    da = jnp.exp(dt[..., None] * A[None, None])                 # (B,T,d_in,N)
+    db = dt[..., None] * Bc[:, :, None, :].astype(jnp.float32)  # (B,T,d_in,N)
+    return da, db, Cc, dt
+
+
+def _causal_conv(p, xs, conv_state=None):
+    """Depthwise causal conv1d (k=d_conv). conv_state: (B, k-1, d_inner)."""
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xs.shape[0], k - 1, xs.shape[-1]), xs.dtype)
+    xpad = jnp.concatenate([conv_state, xs], axis=1)
+    out = sum(
+        xpad[:, i : i + xs.shape[1]] * p["conv_w"][i][None, None]
+        for i in range(k)
+    ) + p["conv_b"]
+    new_state = xpad[:, -(k - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xs.dtype), new_state
+
+
+def mamba_apply(p, x, *, state=None, conv_state=None):
+    """Full sequence (train/prefill) via associative scan.
+
+    Returns (out, (ssm_state (B,d_in,N) f32, conv_state (B,k-1,d_in))).
+    """
+    B_, T, _ = x.shape
+    xs, z, d_inner, d_state, _ = _ssm_inputs(p, x)
+    xs, conv_state = _causal_conv(p, xs, conv_state)
+    da, db, Cc, dt = _discretize(p, xs)
+    bx = db * xs.astype(jnp.float32)[..., None]                 # (B,T,d_in,N)
+    if state is not None:
+        # fold the carried state into the first step: h_0' contribution
+        bx = bx.at[:, 0].add(da[:, 0] * state)
+
+    def combine(a, b):
+        # linear recurrence h' = a2*(a1*h + b1) + b2 composition
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (da, bx), axis=1)
+    y = jnp.einsum("btdn,btn->btd", h, Cc.astype(jnp.float32))
+    y = y + p["D"][None, None] * xs.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # Jamba applies an RMSNorm before out-proj
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6) * p["norm_w"]).astype(x.dtype)
+    out = y @ p["out_proj"]
+    new_state = h[:, -1]
+    return out, (new_state, conv_state)
+
+
+def mamba_decode(p, x, state, conv_state):
+    """One-token step, O(1) state. x: (B, 1, d)."""
+    xs, z, d_inner, d_state, _ = _ssm_inputs(p, x)
+    xs, conv_state = _causal_conv(p, xs, conv_state)
+    da, db, Cc, dt = _discretize(p, xs)
+    h = da[:, 0] * state + db[:, 0] * xs.astype(jnp.float32)[:, 0, :, None]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][None] * xs.astype(jnp.float32)[:, 0]
+    y = y * jax.nn.silu(z.astype(jnp.float32))[:, 0]
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6) * p["norm_w"]).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return out, (h, conv_state)

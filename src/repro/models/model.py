@@ -1,0 +1,269 @@
+"""Model-level API: train_step, prefill_step, serve_step (decode), and the
+abstract input/param/cache specs the multi-pod dry-run lowers against.
+
+Every entry point is a pure function of (params, batch [, caches, opt_state])
+so that ``jax.jit(...).lower(...)`` with ``ShapeDtypeStruct`` stand-ins never
+allocates — the dry-run contract (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.layers import cross_entropy_loss
+from repro.models.param import (
+    ParamDef, abstract_tree, count_params, init_tree, physical_spec, sharding_tree,
+)
+from repro.models.transformer import ArchConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+# ---------------------------------------------------------------------------
+# Shapes (the assigned benchmark cells)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+    # reduced shapes for CPU smoke tests
+    "smoke_train": ShapeSpec("smoke_train", 32, 2, "train"),
+    "smoke_prefill": ShapeSpec("smoke_prefill", 32, 2, "prefill"),
+    "smoke_decode": ShapeSpec("smoke_decode", 32, 2, "decode"),
+}
+
+
+def cell_is_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """The (arch x shape) gate: long_500k runs for SSM/hybrid/linear-attn
+    families (their decode state is O(1) or sequence-sharded); pure
+    full-attention archs skip it per the assignment (see DESIGN.md §6)."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid") or cfg.sub_quadratic:
+            return True, ""
+        return False, (
+            "long_500k requires sub-quadratic token mixing; "
+            f"{cfg.name} ({cfg.family}) is full-attention (skip per spec, DESIGN.md §6)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, T = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, axes):
+        sh = NamedSharding(mesh, physical_spec(shp, axes, mesh)) if mesh is not None else None
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=sh)
+
+    batch: dict = {}
+    if shape.kind in ("train", "prefill"):
+        t_text = T - (cfg.n_frontend_tokens if cfg.frontend == "vlm" else 0)
+        batch["tokens"] = sds((B, t_text), jnp.int32, ("batch", "seq"))
+        if shape.kind == "train":
+            batch["labels"] = sds((B, t_text), jnp.int32, ("batch", "seq"))
+            batch["loss_mask"] = sds((B, t_text), jnp.float32, ("batch", "seq"))
+        if cfg.frontend == "vlm":
+            batch["patch_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                        cfg.dtype, ("batch", "seq", "d_model"))
+        if cfg.enc_dec:
+            enc_len = T if shape.kind == "train" else min(T, 4 * cfg.enc_len_decode)
+            batch["frames"] = sds((B, enc_len, cfg.d_model), cfg.dtype,
+                                  ("batch", "seq", "d_model"))
+    else:  # decode
+        batch["token"] = sds((B, 1), jnp.int32, ("batch", None))
+    return batch
+
+
+def abstract_params(cfg: ArchConfig, mesh=None) -> dict:
+    return abstract_tree(transformer.build_model_defs(cfg), mesh)
+
+
+def abstract_caches(cfg: ArchConfig, shape: ShapeSpec, mesh=None) -> dict:
+    return abstract_tree(transformer.build_cache_defs(cfg, shape.global_batch,
+                                                      shape.seq_len), mesh)
+
+
+def param_shardings(cfg: ArchConfig, mesh) -> dict:
+    return sharding_tree(transformer.build_model_defs(cfg), mesh)
+
+
+def n_params(cfg: ArchConfig) -> int:
+    return count_params(transformer.build_model_defs(cfg))
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: routed experts counted at top_k/E)."""
+    defs = transformer.build_model_defs(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]:
+        size = math.prod(leaf.shape)
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "moe" in keys and any(s in keys for s in ("w_gate", "w_up", "w_down")):
+            size = size * cfg.top_k // max(cfg.n_experts, 1)
+        total += size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Real initialization (smoke scale)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    return init_tree(transformer.build_model_defs(cfg), key)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return init_tree(transformer.build_cache_defs(cfg, batch, max_len),
+                     jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, *,
+            aux_weight: float = 0.01, loss_chunks: int = 8):
+    """Chunked-over-sequence loss: the (tokens x vocab) logits never
+    materialize in full — gemma3-class vocabs (262k) at 65k tokens/chip would
+    otherwise dominate the memory footprint (EXPERIMENTS §Dry-run).  The
+    chunk loop is a python loop (exact under the probe cost accounting)."""
+    hidden, _, aux = transformer.forward(cfg, params, batch, mode="train",
+                                         return_logits=False)
+    if cfg.frontend == "vlm":
+        hidden = hidden[:, batch["patch_embeds"].shape[1]:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["labels"], jnp.float32)
+
+    T = hidden.shape[1]
+    n = loss_chunks
+    while T % n:
+        n -= 1
+    csz = T // n
+    num = jnp.float32(0.0)
+    for i in range(n):
+        sl = slice(i * csz, (i + 1) * csz)
+        logits_c = transformer.apply_head(cfg, params, hidden[:, sl])
+        num = num + cross_entropy_loss(
+            logits_c, batch["labels"][:, sl], mask[:, sl]) \
+            * jnp.maximum(mask[:, sl].sum(), 1.0)
+    loss = num / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def make_train_step(cfg: ArchConfig, *, lr_peak: float = 3e-4, total_steps: int = 10000):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        lr = cosine_lr(opt_state.count, peak=lr_peak, total=total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total,
+                   "lr": lr, "grad_step": opt_state.count}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec):
+    def prefill_step(params, batch, caches):
+        hidden, caches, _ = transformer.forward(cfg, params, batch,
+                                                mode="prefill", caches=caches,
+                                                return_logits=False)
+        # vocab projection for the LAST position only (the one serving needs)
+        logits = transformer.apply_head(cfg, params, hidden[:, -1:])
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: next-token logits + updated caches (the paper's
+    'iteration' — state sweep + tiny global reduction, cf. DESIGN.md §6)."""
+
+    def serve_step(params, batch, caches):
+        logits, caches, _ = transformer.forward(cfg, params, batch,
+                                                mode="decode", caches=caches)
+        return logits, caches
+
+    return serve_step
+
+
+def probe_config(cfg: ArchConfig, k_periods: int, seq_len: int | None = None) -> ArchConfig:
+    """Cost-probe twin: k periods, python-unrolled layers, unrolled inner scans.
+
+    XLA's cost analysis counts while-loop bodies ONCE, so a scanned model's
+    flops/bytes/collectives are undercounted by the trip count.  The dry-run
+    therefore compiles unrolled 1-period and 2-period probes whose difference
+    is the exact per-period cost; the full-depth scanned compile is still what
+    proves memory fit and sharding coherence (EXPERIMENTS.md §Dry-run).
+    Inner loops (flash KV blocks, RWKV chunks) are fully unrolled
+    (``inner_unroll``); the flash block is coarsened to seq/4 to bound probe
+    HLO size (flash cost is block-size invariant).
+    """
+    T = seq_len or (1 << 15)
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}_probe{k_periods}",
+        n_layers=k_periods * len(cfg.period),
+        n_enc_layers=k_periods if cfg.enc_dec else 0,
+        unroll=True,
+        remat=False,
+        attn_block=max(1024, T // 4),
+        inner_unroll=True,
+    )
+
+
+def abstract_opt_state(cfg: ArchConfig, mesh=None) -> AdamWState:
+    """Optimizer moments mirror parameter shapes but carry ZeRO-1 shardings
+    (param spec + batch axes over the largest free dim): f32 Adam state is
+    4x the bf16 params, so it must not replicate over the data axes."""
+    from repro.models.param import zero1_spec
+    defs = transformer.build_model_defs(cfg)
+
+    def mk(d: ParamDef):
+        sh = None
+        if mesh is not None:
+            sh = NamedSharding(mesh, zero1_spec(d.shape, d.axes, mesh))
+        return jax.ShapeDtypeStruct(d.shape, jnp.float32, sharding=sh)
+
+    mu = jax.tree.map(mk, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    nu = jax.tree.map(mk, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return AdamWState(mu=mu, nu=nu, count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def out_shardings_for_train(cfg: ArchConfig, mesh):
+    """(params, opt_state, metrics) shardings: params keep their layout,
+    moments keep ZeRO-1, metrics replicated."""
+    from repro.models.param import zero1_sharding_tree
+    defs = transformer.build_model_defs(cfg)
+    ps = param_shardings(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    z1 = zero1_sharding_tree(defs, mesh)
+    opt = AdamWState(mu=z1, nu=jax.tree.map(lambda s: s, z1), count=rep)
+    metrics = {"loss": rep, "aux_loss": rep, "total_loss": rep, "lr": rep,
+               "grad_step": rep}
+    return ps, opt, metrics

@@ -1,0 +1,199 @@
+"""Mixture-of-Experts with group-aligned capacity dispatch.
+
+Design for the production mesh (see DESIGN.md §6): tokens stay sharded over
+the batch axes; dispatch happens *within* a token group that is aligned with
+the data sharding, so routing involves no cross-device traffic at all.
+Expert FFN weights are sharded tensor-parallel on the hidden (ff) dimension
+— the one dimension that divides the 16-way model axis for every assigned
+MoE arch (qwen2-moe E=60, grok E=8, jamba E=16) — so the only collective per
+MoE layer is the same single AllReduce a dense TP MLP needs.  When E divides
+the model axis (jamba) the `experts` logical axis additionally shards the
+expert weights (expert parallelism), which GSPMD turns into all-gather-free
+grouped matmuls.
+
+Dispatch is scatter-based (no (S, E, C) one-hot): positions inside each
+expert's capacity buffer come from a per-group cumulative sum, dropped
+tokens simply keep their residual value (dropless-for-small-batches via the
+capacity clamp in `capacity()`).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef, constrain
+from repro.models.layers import swiglu
+
+
+def capacity(tokens_per_group: int, n_experts: int, top_k: int,
+             factor: float = 1.25) -> int:
+    """Per-group per-expert buffer size; clamped so tiny decode groups never drop."""
+    c = math.ceil(tokens_per_group * top_k / n_experts * factor)
+    return max(min(tokens_per_group, max(c, top_k)), 1)
+
+
+def build_params(d_model: int, n_experts: int, d_ff: int, *, n_shared: int = 0,
+                 dtype=jnp.bfloat16) -> dict:
+    p = {
+        "router": ParamDef((d_model, n_experts), ("d_model", None), dtype=jnp.float32),
+        "w_gate": ParamDef((n_experts, d_model, d_ff), ("experts", "d_model", "expert_ff"), dtype=dtype),
+        "w_up": ParamDef((n_experts, d_model, d_ff), ("experts", "d_model", "expert_ff"), dtype=dtype),
+        "w_down": ParamDef((n_experts, d_ff, d_model), ("experts", "expert_ff", "d_model"), dtype=dtype),
+    }
+    if n_shared:
+        ff_sh = n_shared * d_ff
+        p["shared_gate"] = ParamDef((d_model, ff_sh), ("d_model", "ff"), dtype=dtype)
+        p["shared_up"] = ParamDef((d_model, ff_sh), ("d_model", "ff"), dtype=dtype)
+        p["shared_down"] = ParamDef((ff_sh, d_model), ("ff", "d_model"), dtype=dtype)
+        p["shared_coef"] = ParamDef((d_model, 1), ("d_model", None), dtype=jnp.float32)
+    return p
+
+
+def moe_apply(params: dict, x: jax.Array, *, n_experts: int, top_k: int,
+              group_size: int = 2048, cap_factor: float = 1.25,
+              router_weights_renorm: bool = True, dispatch: str = "einsum"):
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar).
+
+    dispatch:
+      * "einsum"  — GShard-style one-hot dispatch/combine einsums.  Pure
+        matmuls => GSPMD partitions them perfectly (groups over batch axes,
+        expert ff over model).  Costs extra dispatch flops ~ g*E*cap*d per
+        group but ZERO dispatch collectives.  Default after the hillclimb of
+        EXPERIMENTS.md §Perf (the scatter path all-gathers tens of GB/layer).
+      * "scatter" — positional scatter/gather dispatch (fewer flops, but the
+        batched scatter defeats the SPMD partitioner at 512 devices; kept as
+        the measured baseline and for single-device use).
+    """
+    B, T, d = x.shape
+    n_tok = B * T
+    g = min(group_size, n_tok)
+    while n_tok % g:
+        g //= 2
+    n_groups = n_tok // g
+    E, k = n_experts, top_k
+    cap = capacity(g, E, k, cap_factor)
+
+    xt = x.reshape(n_groups, g, d)
+    # group placement is a sharding-policy decision: by default groups follow
+    # the batch axes; the expert-data-parallel variant (§Perf) also spreads
+    # them over the model axis with replicated expert weights.
+    xt = constrain(xt, ("moe_groups", None, "d_model"))
+    logits = jnp.einsum("nsd,de->nse", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, e_idx = jax.lax.top_k(probs, k)                          # (n, g, k)
+    if router_weights_renorm:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[e_idx.reshape(-1)].add(1.0) / (n_tok * k)
+    aux = E * jnp.sum(me * ce)
+
+    if dispatch == "einsum":
+        out = _einsum_dispatch(params, xt, e_idx, w, cap, E)
+        out = constrain(out, ("moe_groups", None, "d_model"))
+        out = out.reshape(B, T, d)
+        return _add_shared(params, x, out), aux
+
+    def per_group(xg, eg, wg):
+        # position of each (token, choice) inside its expert's buffer
+        flat_e = eg.reshape(-1)                                 # (g*k,)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (g*k, E)
+        pos = jnp.cumsum(oh, axis=0) - oh                       # exclusive per-expert count
+        pos = (pos * oh).sum(-1)                                # (g*k,)
+        keep = pos < cap
+        tok = jnp.repeat(jnp.arange(g), k)
+        buf = jnp.zeros((E, cap, d), xg.dtype)
+        buf = buf.at[
+            jnp.where(keep, flat_e, 0), jnp.where(keep, pos, cap - 1)
+        ].add(jnp.where(keep[:, None], xg[tok], 0).astype(xg.dtype), mode="drop")
+        return buf, (flat_e, pos, keep, tok)
+
+    buf, (flat_e, pos, keep, tok) = jax.vmap(per_group)(xt, e_idx, w)
+    # expert FFN (grouped SwiGLU); ff dim is TP-sharded => one AllReduce at down-proj
+    gate = jnp.einsum("necd,edf->necf", buf, params["w_gate"])
+    up = jnp.einsum("necd,edf->necf", buf, params["w_up"])
+    act = swiglu(gate, up)
+    out_buf = jnp.einsum("necf,efd->necd", act, params["w_down"])
+
+    def per_group_combine(ob, fe, ps, kp, tk, wg):
+        vals = ob[fe, ps]                                       # (g*k, d)
+        wflat = wg.reshape(-1)
+        vals = vals * (wflat * kp)[:, None].astype(ob.dtype)
+        return jnp.zeros((g, d), ob.dtype).at[tk].add(vals)
+
+    out = jax.vmap(per_group_combine)(out_buf, flat_e, pos, keep, tok, w)
+    out = out.reshape(B, T, d)
+    return _add_shared(params, x, out), aux
+
+
+def _einsum_dispatch(params, xt, e_idx, w, cap: int, E: int):
+    """GShard dispatch: per-choice-rank one-hot (g, E, cap) masks + einsums.
+
+    Position-in-expert is an exclusive cumsum over the group per rank (plus
+    counts from earlier ranks), the standard capacity assignment; tokens
+    beyond capacity drop (they keep their residual value).  Everything is
+    elementwise/cumsum/einsum => GSPMD partitions along the group axis with
+    zero dispatch collectives.
+    """
+    n, g, d = xt.shape
+    k = e_idx.shape[-1]
+    disp = jnp.zeros((n, g, E, cap), xt.dtype)
+    comb = jnp.zeros((n, g, E, cap), xt.dtype)
+    counts = jnp.zeros((n, 1, E), jnp.int32)
+    for j in range(k):
+        oh_j = jax.nn.one_hot(e_idx[..., j], E, dtype=jnp.int32)    # (n,g,E)
+        pos_j = jnp.cumsum(oh_j, axis=1) - oh_j + counts
+        keep = ((pos_j < cap) & (oh_j > 0)).astype(xt.dtype)
+        d_j = jax.nn.one_hot(pos_j, cap, dtype=xt.dtype) * keep[..., None]
+        disp = disp + d_j
+        comb = comb + d_j * w[:, :, j, None, None].astype(xt.dtype)
+        counts = counts + oh_j.sum(axis=1, keepdims=True)
+    buf = jnp.einsum("ngd,ngec->necd", xt, disp)
+    gate = jnp.einsum("necd,edf->necf", buf, params["w_gate"])
+    up = jnp.einsum("necd,edf->necf", buf, params["w_up"])
+    act = swiglu(gate, up)
+    out_buf = jnp.einsum("necf,efd->necd", act, params["w_down"])
+    return jnp.einsum("ngec,necd->ngd", comb, out_buf)
+
+
+def _add_shared(params, x, out):
+    if "shared_gate" in params:
+        sh = swiglu(x @ params["shared_gate"], x @ params["shared_up"]) @ params["shared_down"]
+        coef = jax.nn.sigmoid(
+            jnp.einsum("btd,do->bto", x.astype(jnp.float32), params["shared_coef"]))
+        out = out + sh * coef.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def build_dense_params(d_model: int, d_ff: int, *, act: str = "swiglu",
+                       dtype=jnp.bfloat16) -> dict:
+    if act in ("swiglu", "geglu"):
+        return {
+            "gate": ParamDef((d_model, d_ff), ("d_model", "ff"), dtype=dtype),
+            "up": ParamDef((d_model, d_ff), ("d_model", "ff"), dtype=dtype),
+            "down": ParamDef((d_ff, d_model), ("ff", "d_model"), dtype=dtype),
+        }
+    return {  # plain gelu (whisper)
+        "up": ParamDef((d_model, d_ff), ("d_model", "ff"), dtype=dtype),
+        "up_b": ParamDef((d_ff,), ("ff",), init="zeros", dtype=dtype),
+        "down": ParamDef((d_ff, d_model), ("ff", "d_model"), dtype=dtype),
+        "down_b": ParamDef((d_model,), ("d_model",), init="zeros", dtype=dtype),
+    }
+
+
+def dense_apply(params: dict, x: jax.Array, *, act: str = "swiglu") -> jax.Array:
+    from repro.models.layers import gelu
+    if "gate" in params:
+        g = (x @ params["gate"]).astype(jnp.float32)
+        up = x @ params["up"]
+        gated = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        return (gated.astype(up.dtype) * up) @ params["down"]
+    return gelu(x @ params["up"] + params["up_b"]) @ params["down"] + params["down_b"]

@@ -1,0 +1,187 @@
+"""RWKV-6 "Finch" time-mix / channel-mix (arXiv:2404.05892).
+
+The WKV6 recurrence per head (state S in R^{dk x dv}):
+
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,   w_t = exp(-exp(decay_t))
+
+with data-dependent decay (the Finch novelty) and data-dependent token-shift
+interpolation (ddlerp).  Two equivalent evaluation orders are provided:
+
+* ``wkv_recurrent`` — O(1)-state scan over time: decode path and the oracle.
+* ``wkv_chunked``  — chunk-parallel form (within-chunk "attention" matrix +
+  cross-chunk state carry): the train/prefill path.  This is the stencil
+  paper's discipline applied to a linear recurrence: per-chip chunks with a
+  carried state playing the role of the halo.
+
+Relation to the paper: the sequence dimension here is the Z-pencil of
+Fig. 3 — the state carry between chunks is a one-sided halo exchange, and
+``long_500k`` shards chunks across the fabric with ppermute state passing.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+from repro.models.layers import groupnorm_heads
+
+
+LORA_R = 32
+DDLERP_R = 32
+
+
+def build_params(d_model: int, head_size: int, d_ff: int, *, dtype=jnp.bfloat16) -> dict:
+    H = d_model // head_size
+    return {
+        # time-mix (token-shift) static lerps + data-dependent lora (5 mixes: r,k,v,w,g)
+        "mu": ParamDef((5, d_model), (None, "d_model"), init="zeros", dtype=jnp.float32),
+        "ddlerp_w1": ParamDef((d_model, 5, DDLERP_R), ("d_model", None, None), dtype=dtype),
+        "ddlerp_w2": ParamDef((5, DDLERP_R, d_model), (None, None, "d_model"), dtype=dtype),
+        # projections
+        "w_r": ParamDef((d_model, d_model), ("d_model", "heads_flat"), dtype=dtype),
+        "w_k": ParamDef((d_model, d_model), ("d_model", "heads_flat"), dtype=dtype),
+        "w_v": ParamDef((d_model, d_model), ("d_model", "heads_flat"), dtype=dtype),
+        "w_g": ParamDef((d_model, d_model), ("d_model", "heads_flat"), dtype=dtype),
+        "w_o": ParamDef((d_model, d_model), ("heads_flat", "d_model"), dtype=dtype),
+        # decay: w0 + tanh(x @ A) @ B   (data-dependent, per channel)
+        "decay_base": ParamDef((d_model,), ("heads_flat",), init="zeros", dtype=jnp.float32),
+        "decay_A": ParamDef((d_model, LORA_R), ("d_model", None), dtype=dtype),
+        "decay_B": ParamDef((LORA_R, d_model), (None, "heads_flat"), dtype=dtype),
+        # per-channel bonus u and output groupnorm
+        "bonus": ParamDef((H, head_size), ("heads", "head_dim"), init="zeros", dtype=jnp.float32),
+        "ln_x_w": ParamDef((H, head_size), ("heads", "head_dim"), init="ones", dtype=jnp.float32),
+        "ln_x_b": ParamDef((H, head_size), ("heads", "head_dim"), init="zeros", dtype=jnp.float32),
+        # channel-mix
+        "cm_mu": ParamDef((2, d_model), (None, "d_model"), init="zeros", dtype=jnp.float32),
+        "cm_k": ParamDef((d_model, d_ff), ("d_model", "ff"), dtype=dtype),
+        "cm_v": ParamDef((d_ff, d_model), ("ff", "d_model"), dtype=dtype),
+        "cm_r": ParamDef((d_model, d_model), ("d_model", "d_model"), dtype=dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream; prev = last token of the previous segment (or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent interpolation producing the 5 mixed inputs (r,k,v,w,g)."""
+    dx = (x_prev - x).astype(jnp.float32)
+    # f32 operands: XLA CPU has no bf16xbf16->f32 thunk for these contractions
+    inner = jnp.tanh(jnp.einsum("btd,dmr->btmr", dx,
+                                p["ddlerp_w1"].astype(jnp.float32)))
+    lora = jnp.einsum("btmr,mrd->btmd", inner, p["ddlerp_w2"].astype(jnp.float32))
+    mix = p["mu"][None, None] + lora                            # (B,T,5,d) f32
+    return (x[:, :, None].astype(jnp.float32) + dx[:, :, None] * mix).astype(x.dtype)
+
+
+def _project(p, x, x_prev, head_size: int):
+    B, T, d = x.shape
+    H = d // head_size
+    mixed = _ddlerp(p, x, x_prev)                               # (B,T,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+    r = (xr @ p["w_r"]).reshape(B, T, H, head_size)
+    k = (xk @ p["w_k"]).reshape(B, T, H, head_size)
+    v = (xv @ p["w_v"]).reshape(B, T, H, head_size)
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32)).astype(x.dtype)
+    decay_in = jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32),
+                                   p["decay_A"].astype(jnp.float32)))
+    logw = p["decay_base"][None, None] + jnp.einsum(
+        "btr,rd->btd", decay_in, p["decay_B"].astype(jnp.float32))
+    # w in (0,1): w = exp(-exp(logw)); keep log-decay = -exp(logw) (f32)
+    log_decay = -jnp.exp(jnp.clip(logw, -10.0, 6.0)).reshape(B, T, H, head_size)
+    return r, k, v, g, log_decay
+
+
+def wkv_recurrent(r, k, v, log_decay, bonus, state):
+    """Scan over time. r/k/v: (B,T,H,D); state: (B,H,D,D) f32. Returns (o, state)."""
+    B, T, H, D = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, ld = inp                                    # (B,H,D)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                         S + bonus[None, :, :, None] * kv)
+        S = jnp.exp(ld)[..., None] * S + kv
+        return S, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_decay.transpose(1, 0, 2, 3))
+    state, out = jax.lax.scan(step, state, xs)
+    return out.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, log_decay, bonus, state, *, chunk: int = 64,
+                unroll: bool = False):
+    """Chunk-parallel WKV6. Equivalent to the recurrence (tested)."""
+    B, T, H, D = r.shape
+    C = min(chunk, T)
+    while T % C:
+        C //= 2
+    n = T // C
+    rs = lambda a: a.reshape(B, n, C, H, D).transpose(1, 0, 2, 3, 4)  # (n,B,C,H,D)
+    rc, kc, vc, ldc = rs(r.astype(jnp.float32)), rs(k.astype(jnp.float32)), \
+        rs(v.astype(jnp.float32)), rs(log_decay.astype(jnp.float32))
+
+    def chunk_step(S, inp):
+        rb, kb, vb, ld = inp                                    # (B,C,H,D)
+        P = jnp.cumsum(ld, axis=1)                              # inclusive log-decay prods
+        Pm1 = P - ld                                            # exclusive (P_{t-1})
+        # cross-chunk: o_cross[t] = (r_t * exp(Pm1_t)) . S_in
+        r_dec = rb * jnp.exp(Pm1)
+        o = jnp.einsum("bthk,bhkv->bthv", r_dec, S)
+        # within-chunk: A[t,s] = sum_k r_t[k] k_s[k] exp(Pm1_t - P_s)[k], s < t
+        att = jnp.einsum("bthk,bshk->bhts", r_dec, kb * jnp.exp(-P))
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        o = o + jnp.einsum("bhts,bshv->bthv", att, vb)
+        # bonus diagonal term (s == t)
+        o = o + (rb * bonus[None, None] * kb).sum(-1, keepdims=True) * vb
+        # state update: S_out = diag(exp(P_C)) S + sum_s diag(exp(P_C - P_s)) k_s v_s
+        PC = P[:, -1:]                                          # (B,1,H,D)
+        k_dec = kb * jnp.exp(PC - P)
+        S = jnp.exp(PC[:, 0])[..., None] * S + jnp.einsum("bshk,bshv->bhkv", k_dec, vb)
+        return S, o
+
+    state, o = jax.lax.scan(chunk_step, state, (rc, kc, vc, ldc),
+                            unroll=n if unroll else 1)
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
+    return o.astype(r.dtype), state
+
+
+def time_mix(p, x, *, head_size: int, state=None, shift_prev=None, chunked=True,
+             chunk: int = 64, unroll: bool = False):
+    """Full RWKV6 time-mix block. Returns (out, (state, last_token))."""
+    B, T, d = x.shape
+    H = d // head_size
+    if state is None:
+        state = jnp.zeros((B, H, head_size, head_size), jnp.float32)
+    x_prev = _token_shift(x, shift_prev)
+    r, k, v, g, log_decay = _project(p, x, x_prev, head_size)
+    bonus = p["bonus"].astype(jnp.float32)
+    if chunked and T > 1:
+        o, state = wkv_chunked(r, k, v, log_decay, bonus, state, chunk=chunk,
+                               unroll=unroll)
+    else:
+        o, state = wkv_recurrent(r, k, v, log_decay, bonus, state)
+    o = groupnorm_heads(p["ln_x_w"], p["ln_x_b"], o)
+    o = (o.reshape(B, T, d) * g.reshape(B, T, d)) @ p["w_o"]
+    return o, (state, x[:, -1:])
+
+
+def channel_mix(p, x, *, shift_prev=None):
+    """RWKV6 channel-mix (squared-ReLU FFN with token shift + receptance gate)."""
+    x_prev = _token_shift(x, shift_prev)
+    dx = (x_prev - x).astype(jnp.float32)
+    mu = p["cm_mu"][None, None]                                  # (1,1,2,d)
+    xk = (x.astype(jnp.float32) + dx * mu[:, :, 0]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + dx * mu[:, :, 1]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu((xk @ p["cm_k"]).astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid((xr @ p["cm_r"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * (kk @ p["cm_v"]), x[:, -1:]

@@ -1,0 +1,401 @@
+"""Architecture assembly: configs, layer stacks, period-scan, caches.
+
+Layers are scanned over *periods*: the repeating pattern of layer kinds
+(dense archs: period=1; gemma3: 5 local + 1 global; jamba: 8-layer
+attn/mamba interleave with alternating MoE).  Parameters and caches carry a
+leading ``layers`` axis of length ``n_layers // len(period)`` so the HLO is
+O(period) deep regardless of depth — essential for 512-device compile times
+and the standard production pattern (MaxText-style scan + remat).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mamba, moe, rwkv6
+from repro.models.layers import layernorm, rmsnorm
+from repro.models.param import ParamDef, constrain, stack_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"              # attn | mamba | rwkv
+    window: int | None = None       # sliding-window width (attn only)
+    moe: bool = False               # MoE MLP instead of dense
+    cross: bool = False             # + cross-attention (whisper decoder)
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    period: tuple[LayerSpec, ...] = (LayerSpec(),)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_group_size: int = 2048
+    moe_dispatch: str = "einsum"    # einsum (GSPMD-clean) | scatter (baseline)
+    # attention details
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    attn_softcap: float | None = None
+    # SSM / RWKV
+    rwkv_head_size: int = 64
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    # structure
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: str | None = None     # vlm | audio
+    n_frontend_tokens: int = 256
+    enc_len_decode: int = 1500      # whisper: frozen encoder frames at decode
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu
+    scale_embed: bool = False       # gemma-style sqrt(d) embedding scale
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    # lowering/compile shape knobs (cost probes set these; see launch/dryrun.py)
+    unroll: bool = False            # python-loop layers instead of lax.scan
+    attn_block: int = 1024          # flash-attention KV block size
+    rwkv_chunk: int = 64            # RWKV chunk-parallel width
+    inner_unroll: bool = False      # fully unroll flash/RWKV inner scans
+    # per-arch sharding-rule overrides ((key, axes) pairs), e.g. FSDP-style
+    # weight sharding over the data axes for the 314B/52B archs
+    rules: tuple = ()
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.period) == 0, (self.name, self.n_layers, len(self.period))
+        return self.n_layers // len(self.period)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff NO layer does full-context quadratic attention (long_500k gate)."""
+        return all(s.kind != "attn" or s.window is not None for s in self.period)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs autoregress (whisper via its decoder)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _norm_defs(cfg: ArchConfig) -> dict:
+    d = {"w": ParamDef((cfg.d_model,), ("d_model",), init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        d["b"] = ParamDef((cfg.d_model,), ("d_model",), init="zeros", dtype=jnp.float32)
+    return d
+
+
+def _apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(p["w"], p["b"], x)
+    return rmsnorm(p["w"], x)
+
+
+def build_layer_defs(cfg: ArchConfig, spec: LayerSpec) -> dict:
+    d: dict = {"ln1": _norm_defs(cfg)}
+    if spec.kind == "attn":
+        d["attn"] = attention.build_params(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+            qkv_bias=cfg.qkv_bias, cross=spec.cross, dtype=cfg.dtype)
+        if spec.cross:
+            d["ln_c"] = _norm_defs(cfg)
+    elif spec.kind == "mamba":
+        d["mamba"] = mamba.build_params(
+            cfg.d_model, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+            expand=cfg.mamba_expand, dtype=cfg.dtype)
+    elif spec.kind == "rwkv":
+        d["rwkv"] = rwkv6.build_params(cfg.d_model, cfg.rwkv_head_size, cfg.d_ff,
+                                       dtype=cfg.dtype)
+        d["ln2"] = _norm_defs(cfg)
+        return d
+    else:
+        raise ValueError(spec.kind)
+    d["ln2"] = _norm_defs(cfg)
+    if spec.moe:
+        d["moe"] = moe.build_params(cfg.d_model, cfg.n_experts, cfg.d_ff_expert,
+                                    n_shared=cfg.n_shared_experts, dtype=cfg.dtype)
+    else:
+        d["mlp"] = moe.build_dense_params(cfg.d_model, cfg.d_ff, act=cfg.act,
+                                          dtype=cfg.dtype)
+    return d
+
+
+def build_model_defs(cfg: ArchConfig) -> dict:
+    defs: dict = {
+        "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "d_model"),
+                          init="embed", dtype=cfg.dtype),
+        "final_norm": _norm_defs(cfg),
+        "layers": {
+            f"pos{i}": stack_defs(build_layer_defs(cfg, s), cfg.n_periods)
+            for i, s in enumerate(cfg.period)
+        },
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab), ("d_model", "vocab"),
+                                   dtype=cfg.dtype)
+    if cfg.enc_dec:
+        enc_spec = LayerSpec(kind="attn", causal=False)
+        defs["enc_layers"] = {
+            "pos0": stack_defs(build_layer_defs(cfg, enc_spec), cfg.n_enc_layers)
+        }
+        defs["enc_norm"] = _norm_defs(cfg)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_defs(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int,
+                      enc_len: int) -> Any:
+    if spec.kind == "attn":
+        c = {
+            "attn": attention.AttnCache(
+                k=ParamDef((batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           ("batch", "kv_seq", "kv_heads", "head_dim"),
+                           init="zeros", dtype=cfg.dtype),
+                v=ParamDef((batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           ("batch", "kv_seq", "kv_heads", "head_dim"),
+                           init="zeros", dtype=cfg.dtype),
+                length=ParamDef((), (), init="zeros", dtype=jnp.int32),
+            )
+        }
+        if spec.cross:
+            c["cross_k"] = ParamDef((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                                    ("batch", None, "kv_heads", "head_dim"),
+                                    init="zeros", dtype=cfg.dtype)
+            c["cross_v"] = ParamDef((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                                    ("batch", None, "kv_heads", "head_dim"),
+                                    init="zeros", dtype=cfg.dtype)
+        return c
+    if spec.kind == "mamba":
+        d_inner = cfg.mamba_expand * cfg.d_model
+        return {
+            "ssm": ParamDef((batch, d_inner, cfg.mamba_d_state),
+                            ("batch", "heads_flat", "state"), init="zeros",
+                            dtype=jnp.float32),
+            "conv": ParamDef((batch, cfg.mamba_d_conv - 1, d_inner),
+                             ("batch", None, "heads_flat"), init="zeros",
+                             dtype=cfg.dtype),
+        }
+    if spec.kind == "rwkv":
+        H = cfg.d_model // cfg.rwkv_head_size
+        return {
+            "wkv": ParamDef((batch, H, cfg.rwkv_head_size, cfg.rwkv_head_size),
+                            ("batch", "heads", None, None), init="zeros",
+                            dtype=jnp.float32),
+            "tm_shift": ParamDef((batch, 1, cfg.d_model), ("batch", None, None),
+                                 init="zeros", dtype=cfg.dtype),
+            "cm_shift": ParamDef((batch, 1, cfg.d_model), ("batch", None, None),
+                                 init="zeros", dtype=cfg.dtype),
+        }
+    raise ValueError(spec.kind)
+
+
+def build_cache_defs(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    enc_len = cfg.enc_len_decode if cfg.enc_dec else 0
+    return {
+        f"pos{i}": stack_defs(_layer_cache_defs(cfg, s, batch, max_len, enc_len),
+                              cfg.n_periods)
+        for i, s in enumerate(cfg.period)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ArchConfig, spec: LayerSpec, p: dict, x: jax.Array, *,
+                mode: str, cache: dict | None, positions, enc_out=None,
+                prefix_len: int = 0):
+    """One block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache = dict(cache) if cache is not None else None
+
+    # layer-boundary sharding: sequence-parallel for full-sequence modes
+    # (shrinks the remat stash 16x — the difference between fitting 16GB/chip
+    # and not, see EXPERIMENTS §Dry-run); decode keeps seq unsharded (T=1).
+    x = constrain(x, ("batch", "seq" if mode == "decode" else "seq_act",
+                      "d_model"))
+    if spec.kind == "attn":
+        h = _apply_norm(cfg, p["ln1"], x)
+        o, ac = attention.self_attention(
+            p["attn"], h, n_kv=cfg.n_kv_heads, mode=mode,
+            cache=cache["attn"] if cache else None, positions=positions,
+            causal=spec.causal, window=spec.window, prefix_len=prefix_len,
+            rope_theta=cfg.rope_theta, softcap=cfg.attn_softcap,
+            block=cfg.attn_block, unroll=cfg.inner_unroll)
+        x = x + o
+        if new_cache is not None:
+            new_cache["attn"] = ac
+        if spec.cross:
+            hc = _apply_norm(cfg, p["ln_c"], x)
+            if mode == "decode":
+                enc_kv = (cache["cross_k"], cache["cross_v"])
+            else:
+                enc_kv = attention.encode_cross_kv(p["attn"], enc_out)
+                if new_cache is not None:
+                    ek, ev = enc_kv
+                    new_cache["cross_k"] = ek.astype(cfg.dtype)
+                    new_cache["cross_v"] = ev.astype(cfg.dtype)
+            x = x + attention.cross_attention(p["attn"], hc, enc_kv,
+                                              n_kv=cfg.n_kv_heads,
+                                              block=cfg.attn_block,
+                                              unroll=cfg.inner_unroll)
+    elif spec.kind == "mamba":
+        h = _apply_norm(cfg, p["ln1"], x)
+        if mode == "decode":
+            o, (ssm, conv) = mamba.mamba_decode(p["mamba"], h, cache["ssm"], cache["conv"])
+        else:
+            o, (ssm, conv) = mamba.mamba_apply(p["mamba"], h)
+        x = x + o
+        if new_cache is not None:
+            new_cache["ssm"], new_cache["conv"] = ssm, conv
+    elif spec.kind == "rwkv":
+        h = _apply_norm(cfg, p["ln1"], x)
+        o, (wkv, tm_shift) = rwkv6.time_mix(
+            p["rwkv"], h, head_size=cfg.rwkv_head_size,
+            state=cache["wkv"] if cache else None,
+            shift_prev=cache["tm_shift"] if cache else None,
+            chunked=(mode != "decode"), chunk=cfg.rwkv_chunk,
+            unroll=cfg.inner_unroll)
+        x = x + o
+        h = _apply_norm(cfg, p["ln2"], x)
+        o, cm_shift = rwkv6.channel_mix(
+            p["rwkv"], h, shift_prev=cache["cm_shift"] if cache else None)
+        x = x + o
+        if new_cache is not None:
+            new_cache["wkv"], new_cache["tm_shift"] = wkv, tm_shift
+            new_cache["cm_shift"] = cm_shift
+        return x, new_cache, aux
+
+    # MLP / MoE half (attn + mamba kinds)
+    h = _apply_norm(cfg, p["ln2"], x)
+    if spec.moe:
+        o, aux = moe.moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                               top_k=cfg.top_k, group_size=cfg.moe_group_size,
+                               dispatch=cfg.moe_dispatch)
+    else:
+        o = moe.dense_apply(p["mlp"], h, act=cfg.act)
+    x = x + o
+    return x, new_cache, aux
+
+
+def stack_apply(cfg: ArchConfig, layer_params: dict, x: jax.Array, *, mode: str,
+                caches: dict | None, positions, enc_out=None, prefix_len: int = 0,
+                period=None):
+    """Scan the period pattern over n_periods. Returns (x, new_caches, aux)."""
+    period = period or cfg.period
+
+    def body(carry, xs):
+        h, aux = carry
+        pslice, cslice = xs
+        new_cs = {}
+        for i, spec in enumerate(period):
+            key = f"pos{i}"
+            h, nc, a = apply_layer(
+                cfg, spec, pslice[key], h, mode=mode,
+                cache=cslice[key] if cslice is not None else None,
+                positions=positions, enc_out=enc_out, prefix_len=prefix_len)
+            new_cs[key] = nc if nc is not None else {}
+            aux = aux + a
+        return (h, aux), new_cs
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    if cfg.unroll:
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        carry = (x, jnp.float32(0.0))
+        ys = []
+        for i in range(n):
+            xs_i = jax.tree.map(lambda a: a[i], (layer_params, caches))
+            carry, y = body(carry, xs_i)
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ys) if (
+            caches is not None and ys and jax.tree.leaves(ys[0])) else None
+        return x, (new_caches if caches is not None else None), aux
+
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        (layer_params, caches))
+    return x, (new_caches if caches is not None else None), aux
+
+
+def apply_head(cfg: ArchConfig, params: dict, x: jax.Array) -> jax.Array:
+    """Final-norm'd hidden -> logits (tied or untied head), vocab-sharded."""
+    head = params.get("lm_head", None)
+    if head is None:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, head)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, mode: str,
+            caches: dict | None = None, return_logits: bool = True):
+    """Unified forward. Returns (logits_or_hidden, new_caches, aux).
+
+    batch keys: tokens (B,T) for train/prefill; token (B,1) for decode;
+    + patch_embeds (B,P,d) for vlm; + frames (B,S_enc,d) for audio.
+    ``return_logits=False`` returns the final-norm'd hidden states so the
+    caller can chunk the (huge) vocab projection (train loss, prefill).
+    """
+    embed = params["embed"]
+
+    def embed_tokens(t):
+        x = embed[t]
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        return x
+
+    enc_out = None
+    prefix_len = 0
+    if cfg.enc_dec and mode != "decode":
+        enc = batch["frames"].astype(cfg.dtype)
+        enc, _, _ = stack_apply(
+            cfg, params["enc_layers"], enc, mode="train", caches=None,
+            positions=jnp.arange(enc.shape[1]),
+            period=(LayerSpec(kind="attn", causal=False),))
+        enc_out = _apply_norm(cfg, params["enc_norm"], enc)
+
+    if mode == "decode":
+        x = embed_tokens(batch["token"])
+        positions = None
+    else:
+        x = embed_tokens(batch["tokens"])
+        if cfg.frontend == "vlm":
+            pe = batch["patch_embeds"].astype(cfg.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            prefix_len = pe.shape[1]
+        positions = jnp.arange(x.shape[1])
+
+    x, new_caches, aux = stack_apply(
+        cfg, params["layers"], x, mode=mode, caches=caches, positions=positions,
+        enc_out=enc_out, prefix_len=prefix_len)
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if not return_logits:
+        return x, new_caches, aux
+    return apply_head(cfg, params, x), new_caches, aux

@@ -1,0 +1,5 @@
+"""Optimizers (pure JAX, no optax): AdamW + cosine schedule + global clipping,
+plus an int8 error-feedback gradient-compression wrapper for the DP axis."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.optim.compress import compress_grads, decompress_grads  # noqa: F401

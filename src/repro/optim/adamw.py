@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Moments are kept in f32 regardless of parameter dtype (mixed-precision
+training discipline, mirroring the paper's 16-bit-storage / 32-bit-reduce
+split); the update is computed in f32 and cast back to the parameter dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["mu", "nu", "count"], meta_fields=[],
+)
+@dataclasses.dataclass
+class AdamWState:
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def cosine_lr(step, *, peak: float = 3e-4, warmup: int = 100, total: int = 10000,
+              floor: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = peak * (step + 1) / max(warmup, 1)   # step 0 takes a real (small) step
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+    ))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float | None = 1.0):
+    count = state.count + 1
+    if clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, n):
+        step = (m / c1) / (jnp.sqrt(n / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu, nu, count)

@@ -1,0 +1,36 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for the data-parallel AllReduce at 1000+ node scale).
+
+Each leaf is quantized to int8 with a per-leaf f32 scale before the
+cross-replica reduction; the quantization error is carried to the next step
+(error feedback) so convergence is preserved (tested on a quadratic and on
+the LM smoke configs).  Cuts DP gradient traffic 4x vs f32 / 2x vs bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, error):
+    """Returns (int8_tree, scales_tree, new_error_tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def q(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - qi.astype(jnp.float32) * scale
+        return qi, scale, new_e
+
+    out = jax.tree.map(q, grads, error)
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    sc = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    er = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return qs, sc, er
+
+
+def decompress_grads(qs, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)

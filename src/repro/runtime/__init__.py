@@ -1,0 +1,1 @@
+from repro.runtime.runner import FaultTolerantRunner, RunnerConfig  # noqa: F401
