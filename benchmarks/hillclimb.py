@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """§Perf hillclimb driver: baseline -> optimized variants for the three
 chosen cells, each a hypothesis -> change -> measure cycle (EXPERIMENTS.md
 §Perf records the full log).
@@ -12,6 +9,9 @@ Chosen cells (from the baseline roofline table):
 
 Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--cell stencil|moe|long]
 """
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses

@@ -1,0 +1,170 @@
+"""Stencil-family sweep: FLOP and collective accounting across shapes.
+
+For each family member (star7, star13, star25, box27) this benchmark
+reports, in one place, what changing the stencil shape costs:
+
+* analytic per-meshpoint accounting (Table-I generalized): flops per SpMV,
+  ops per BiCGStab iteration, halo depth and words moved per shard;
+* measured HLO collective counts for ONE distributed iteration
+  (``make_iteration_fn`` lowered on a 2x2 fake-device fabric in a
+  subprocess): AllReduces with the fused vs paper-separate reduction
+  schedule, and collective-permutes for the two halo-exchange SpMVs;
+* a small end-to-end solve (iterations, residual, wall time, achieved
+  FLOP/s on this host).
+
+Emits ``name,metric,value`` CSV rows (the benchmarks/run.py contract) and
+writes the full structured record to ``results/stencil_family.json`` —
+see docs/benchmarks.md for the meaning of every JSON field.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+SHAPES = ("star7", "star13", "star25", "box27")
+SOLVE_SHAPE = (16, 16, 8)
+_SUBPROC_DEVICES = 4
+
+_COUNT_SNIPPET = """
+    import json
+    import jax, jax.numpy as jnp
+    from repro.core import bicgstab, precision, stencil
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices({n})
+    shape = {shape}
+    out = {{}}
+    for name in {shapes}:
+        spec = stencil.get_spec(name)
+        cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape, spec=spec)
+        structs = [jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cf)]
+        f32 = jax.ShapeDtypeStruct(shape, jnp.float32)
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        structs += [f32, f32, f32, f32, scalar]
+        counts = {{}}
+        for fused in (True, False):
+            it = bicgstab.make_iteration_fn(mesh, policy=precision.F32,
+                                            fused_reductions=fused)
+            text = jax.jit(it).lower(*structs).as_text()
+            key = "fused" if fused else "separate"
+            counts["allreduce_per_iter_" + key] = (
+                text.count("all_reduce") + text.count("all-reduce"))
+            if fused:
+                counts["ppermute_per_iter"] = (
+                    text.count("collective_permute") + text.count("collective-permute"))
+        out[name] = counts
+    print(json.dumps(out))
+"""
+
+
+def measure_collectives(shapes=SHAPES, n_devices: int = _SUBPROC_DEVICES,
+                        shape=SOLVE_SHAPE) -> dict:
+    """HLO collective-op counts per iteration, on a fake multi-device fabric.
+
+    Runs in a subprocess because the fabric needs
+    ``--xla_force_host_platform_device_count`` set before jax initializes.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent(_COUNT_SNIPPET.format(
+        n=n_devices, shape=tuple(shape), shapes=tuple(shapes)))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"collective-count subprocess failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def sweep(shapes=SHAPES, *, measure_hlo: bool = True) -> dict:
+    """The full sweep record (the contents of results/stencil_family.json)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import bicgstab, precision, stencil
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices()
+    hlo = measure_collectives(shapes) if measure_hlo else {}
+    npts = int(np.prod(SOLVE_SHAPE))
+    # per-shard block on the 2x2 fabric the HLO collectives are measured on,
+    # so the analytic halo words and the measured ppermute counts line up
+    hlo_block = (SOLVE_SHAPE[0] // 2, SOLVE_SHAPE[1] // 2, SOLVE_SHAPE[2])
+    cells = []
+    for name in shapes:
+        spec = stencil.get_spec(name)
+        flops_spmv = stencil.spec_flops_per_point(spec)
+        ops_iter = 2 * flops_spmv + 8 + 12          # 2 SpMV + 4 dots + 6 AXPYs
+        cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), SOLVE_SHAPE,
+                                         spec=spec)
+        x_true = jax.random.normal(jax.random.PRNGKey(1), SOLVE_SHAPE,
+                                   jnp.float32)
+        b = stencil.rhs_for_solution(cf, x_true)
+        t0 = time.time()
+        res = bicgstab.solve_distributed(mesh, cf, b, tol=1e-6, maxiter=300,
+                                         policy=precision.F32)
+        jax.block_until_ready(res.x)
+        wall = time.time() - t0
+        iters = int(res.iterations)
+        cells.append({
+            "stencil": name,
+            "pattern": spec.pattern,
+            "radius": spec.radius,
+            "n_points": spec.n_points,
+            "halo_depth": spec.radius,
+            "needs_corner_halo": spec.needs_corners,
+            "flops_per_point_per_spmv": flops_spmv,
+            "ops_per_point_per_iter": ops_iter,
+            "words_per_point_per_spmv": stencil.spec_words_per_point(spec),
+            "halo_words_per_spmv_per_shard": stencil.halo_words_per_spmv(
+                spec, hlo_block),
+            **hlo.get(name, {}),
+            "solve": {
+                "problem_shape": list(SOLVE_SHAPE),
+                "iterations": iters,
+                "converged": bool(res.converged),
+                "rel_residual": float(res.rel_residual),
+                "wall_s": wall,
+                "achieved_flops_per_s": iters * ops_iter * npts / max(wall, 1e-9),
+            },
+        })
+    return {
+        "generated_by": "benchmarks/stencil_family.py",
+        "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
+        "hlo_fabric_devices": _SUBPROC_DEVICES if measure_hlo else 0,
+        "cells": cells,
+    }
+
+
+def run() -> list[str]:
+    record = sweep()
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "stencil_family.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    rows = [f"stencil_family,json_path,{path}"]
+    for c in record["cells"]:
+        n = c["stencil"]
+        rows.append(f"stencil_family,{n}_flops_per_pt_spmv,{c['flops_per_point_per_spmv']}")
+        rows.append(f"stencil_family,{n}_ops_per_pt_iter,{c['ops_per_point_per_iter']}")
+        rows.append(f"stencil_family,{n}_halo_depth,{c['halo_depth']}")
+        if "allreduce_per_iter_fused" in c:
+            rows.append(f"stencil_family,{n}_allreduce_fused,{c['allreduce_per_iter_fused']}")
+            rows.append(f"stencil_family,{n}_allreduce_separate,{c['allreduce_per_iter_separate']}")
+            rows.append(f"stencil_family,{n}_ppermute_per_iter,{c['ppermute_per_iter']}")
+        s = c["solve"]
+        assert s["converged"], f"{n} solve did not converge: {s}"
+        rows.append(f"stencil_family,{n}_solve_iters,{s['iterations']}")
+        rows.append(f"stencil_family,{n}_mflops,{s['achieved_flops_per_s'] / 1e6:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

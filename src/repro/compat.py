@@ -1,0 +1,69 @@
+"""Version gates for the jax API surface this repo uses.
+
+The code targets current jax (>= 0.6: ``jax.shard_map``, mesh
+``axis_types``, Pallas ``pl.Element`` block indexing) but must also run on
+the jax 0.4.x line.  Every version-sensitive call site goes through this
+module so the rest of the codebase stays on the modern spelling.
+
+Nothing here is installed lazily — if an API is missing we fall back to the
+older equivalent, never to a stub that silently does nothing.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with fallback to the experimental module.
+
+    ``check_vma`` (>= 0.7) and ``check_rep`` (0.4.x) gate the same
+    replication/varying-manual-axes checker, so the flag maps across.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape, axis_names, **kwargs):
+    """``jax.make_mesh`` with explicit Auto axis types where supported
+    (silences the 0.8 -> 0.9 deprecation warning; older jax has no
+    ``axis_types`` and defaults to the same behaviour).  Extra kwargs
+    (e.g. ``devices=``) pass through on every version."""
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(shape, axis_names, **kwargs)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when no mesh is set.
+
+    jax 0.4.x predates the ambient-mesh context entirely, so there is never
+    an abstract mesh to report — callers (e.g. ``models.param.constrain``)
+    already treat None as "single device / smoke test, skip constraints".
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        return mesh if mesh is None or mesh.axis_names else None
+    return None
+
+
+def set_mesh(mesh):
+    """``jax.sharding.set_mesh`` context, falling back to the legacy
+    ``with mesh:`` physical-mesh context on jax 0.4.x (sharding constraints
+    then no-op via :func:`get_abstract_mesh` returning None, which keeps
+    single-process smoke paths running)."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+#: True when Pallas supports element-indexed BlockSpecs (``pl.Element``),
+#: which the stencil kernels use to read overlapping halo'd z-windows.
+#: Without it the kernels keep the padded iterate fully resident and slice
+#: the window with ``lax.dynamic_slice`` inside the kernel body instead.
+HAS_PL_ELEMENT = hasattr(pl, "Element")

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.halo import FabricAxes, local_apply, make_dots
 from repro.core.precision import Policy, F32, MIXED
 from repro.core.stencil import StencilCoeffs, apply_ref
@@ -273,7 +274,7 @@ def solve_distributed(
     )
     if x0 is None:
         x0 = jnp.zeros_like(b)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         solve_fn, mesh=mesh,
         in_specs=(spec, spec, spec),
         out_specs=out_specs,
@@ -324,7 +325,7 @@ def make_iteration_fn(
 
     spec = fabric.spec(3)
     scalar = P()
-    return jax.shard_map(
+    return shard_map(
         iteration, mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec, scalar),
         out_specs=(spec, spec, spec, scalar, scalar),

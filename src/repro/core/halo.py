@@ -1,4 +1,5 @@
-"""Halo-exchange SpMV on the chip fabric (paper §IV-1, Figs. 3-5).
+"""Halo-exchange SpMV on the chip fabric (paper §IV-1, Figs. 3-5),
+generalized to depth-r halos for the whole stencil family.
 
 The paper's scheme: every core broadcasts its Z-pencil of the iterate to its
 four fabric neighbors (one outgoing channel, four incoming channels — the
@@ -14,7 +15,16 @@ exactly the zero-Dirichlet boundary.  The CS-1 FIFO/task overlap machinery
 is replaced by dataflow: the interior stencil terms do not depend on the
 permutes, so XLA's latency-hiding scheduler runs the collectives under the
 interior compute (``overlap=True`` makes this explicit by shrinking the
-halo-dependent computation to a rank-1 face update).
+halo-dependent computation to the outer shell of the block).
+
+Stencil-family generalization (:func:`gather_halo`): a radius-r spec moves
+slabs of thickness r instead of single faces — the r stacked face shifts of
+a depth-r exchange coalesced into one ``ppermute`` message per direction
+per axis.  Star stencils exchange the axes independently (all collectives
+overlappable); box stencils need edge/corner halo values, obtained by
+exchanging the axes *sequentially* on the already-padded block so received
+halos ride along to the diagonal neighbors (the standard corner-carrying
+trick — no extra diagonal ppermutes on the torus).
 
 All functions here are *local* (rank-per-shard) and must run inside
 ``jax.shard_map``; :mod:`repro.core.bicgstab` builds the global solver.
@@ -30,7 +40,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.precision import Policy, F32
-from repro.core.stencil import StencilCoeffs, _shift
+from repro.core.stencil import StencilCoeffs, _shift_nd, name_offset
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +68,13 @@ class FabricAxes:
             return P(self.x, self.y)
         return P(self.x, self.y, self.z)
 
+    def split_info(self, ndim: int = 3) -> list[tuple[int, str | None, int]]:
+        """(mesh axis, fabric axis name or None, fabric extent) per dimension."""
+        info = [(0, self.x, self.nx), (1, self.y, self.ny)]
+        if ndim == 3:
+            info.append((2, self.z, self.nz))
+        return info
+
 
 def _exchange(face_lo, face_hi, axis_name: str, n: int):
     """Bidirectional nearest-neighbor exchange of two faces along one axis.
@@ -74,26 +91,99 @@ def _exchange(face_lo, face_hi, axis_name: str, n: int):
     return from_lo, from_hi
 
 
-def halo_faces(v: jax.Array, fabric: FabricAxes):
-    """All neighbor faces of the local block, one ppermute pair per axis.
+def _take_slab(v: jax.Array, axis: int, sl: slice) -> jax.Array:
+    return v[tuple(sl if i == axis else slice(None) for i in range(v.ndim))]
 
-    This is the communication phase of the paper's SpMV: 2 or 3 bidirectional
-    face exchanges, all independent, all overlappable with interior compute.
+
+def gather_halo(
+    v: jax.Array,
+    fabric: FabricAxes,
+    radius: int = 1,
+    *,
+    corners: bool = False,
+) -> jax.Array:
+    """The local block padded by ``radius`` on every axis, halos filled.
+
+    This is the communication phase of the paper's SpMV, depth-r: each split
+    axis exchanges a slab of thickness r (the r stacked face shifts of a
+    depth-r halo coalesced into one ``ppermute`` message per direction).
+    Unsplit axes and fabric edges are zero-padded — the global zero-Dirichlet
+    boundary.
+
+    ``corners=False`` (star stencils): the axes exchange independently on the
+    raw block, so all collectives are mutually independent and overlappable
+    with interior compute; the edge/corner halo regions stay zero (a star
+    never reads them).
+
+    ``corners=True`` (box stencils): the axes exchange *sequentially* on the
+    progressively padded block, so halo values received on earlier axes ride
+    along to diagonal neighbors — edge/corner halos arrive without any extra
+    diagonal messages on the torus.
     """
-    faces = {}
-    take = lambda a, sl: v[tuple(sl if i == a else slice(None) for i in range(v.ndim))]
-    faces["xm"], faces["xp"] = _exchange(take(0, slice(0, 1)), take(0, slice(-1, None)),
-                                         fabric.x, fabric.nx)
-    faces["ym"], faces["yp"] = _exchange(take(1, slice(0, 1)), take(1, slice(-1, None)),
-                                         fabric.y, fabric.ny)
-    if v.ndim == 3 and fabric.z is not None:
-        faces["zm"], faces["zp"] = _exchange(take(2, slice(0, 1)), take(2, slice(-1, None)),
-                                             fabric.z, fabric.nz)
-    return faces
+    r = radius
+    splits = fabric.split_info(v.ndim)
+    for axis, name, n in splits:
+        if name is not None and n > 1 and v.shape[axis] < r:
+            raise ValueError(
+                f"halo depth {r} exceeds the local block extent {v.shape[axis]} "
+                f"on axis {axis}; use fewer shards or a larger mesh")
+
+    if not corners:
+        vp = jnp.pad(v, r)
+        for axis, name, n in splits:
+            if name is None or n == 1:
+                continue
+            lo = _take_slab(v, axis, slice(0, r))
+            hi = _take_slab(v, axis, slice(v.shape[axis] - r, None))
+            from_lo, from_hi = _exchange(lo, hi, name, n)
+            idx = lambda sl: tuple(
+                sl if i == axis else slice(r, r + v.shape[i]) for i in range(v.ndim))
+            vp = vp.at[idx(slice(0, r))].set(from_lo)
+            vp = vp.at[idx(slice(r + v.shape[axis], None))].set(from_hi)
+        return vp
+
+    vp = v
+    for axis, name, n in splits:
+        if name is None or n == 1:
+            pad = [(0, 0)] * vp.ndim
+            pad[axis] = (r, r)
+            vp = jnp.pad(vp, pad)
+        else:
+            m = vp.shape[axis]
+            lo = _take_slab(vp, axis, slice(0, r))
+            hi = _take_slab(vp, axis, slice(m - r, None))
+            from_lo, from_hi = _exchange(lo, hi, name, n)
+            vp = jnp.concatenate([from_lo, vp, from_hi], axis=axis)
+    return vp
 
 
-_AXIS_OF = {"xp": 0, "xm": 0, "yp": 1, "ym": 1, "zp": 2, "zm": 2}
-_SIGN_OF = {"xp": +1, "xm": -1, "yp": +1, "ym": -1, "zp": +1, "zm": -1}
+def _window(vp: jax.Array, off: tuple[int, ...], shape: tuple[int, ...],
+            r: int) -> jax.Array:
+    """The ``shape``-sized window of the r-padded block shifted by ``off``."""
+    return vp[tuple(slice(r + o, r + o + n) for o, n in zip(off, shape))]
+
+
+def padded_apply(
+    coeffs: StencilCoeffs,
+    vp: jax.Array,
+    shape: tuple[int, ...],
+    *,
+    policy: Policy = F32,
+    region: tuple[slice, ...] | None = None,
+) -> jax.Array:
+    """u = A v from an r-padded local block (halos already in place).
+
+    ``region`` restricts the computation to a sub-box of the local block —
+    used by the overlap path to recompute only the halo-dependent shell.
+    """
+    spec = coeffs.spec
+    c = policy.compute
+    reg = region if region is not None else tuple(slice(None) for _ in shape)
+    sub = lambda off: _window(vp, off, shape, spec.radius)[reg].astype(c)
+    u = sub((0,) * len(shape))  # unit main diagonal (Jacobi preconditioning)
+    for name, cf in coeffs.diags.items():
+        u = u + cf[reg].astype(c) * sub(name_offset(name, len(shape)))
+    return u
 
 
 def local_apply(
@@ -104,50 +194,43 @@ def local_apply(
     policy: Policy = F32,
     overlap: bool = True,
 ) -> jax.Array:
-    """Local shard of u = A v with halo exchange.  Runs inside shard_map.
+    """Local shard of u = A v with depth-r halo exchange.  Runs inside
+    shard_map and handles every spec in the stencil family (the halo depth,
+    and whether corners are exchanged, derive from the coefficient names).
 
-    ``overlap=False`` is the paper-faithful streaming form: each off-diagonal
-    term consumes a full shifted copy built by concatenating the received
-    face (the analogue of the CS-1 fabric streams feeding multiply threads).
+    ``overlap=False`` is the paper-faithful streaming form: every term reads
+    the fully assembled halo'd block (the analogue of the CS-1 fabric streams
+    feeding multiply threads).
 
-    ``overlap=True`` is the TPU-native form: interior shifts (which are pure
-    local compute) are accumulated first and each received face only patches
-    one boundary plane — the collective-permutes have a minimal dependent
-    region, so the scheduler can hide them under the interior work.
+    ``overlap=True`` is the TPU-native form: the zero-Dirichlet local apply
+    (pure local compute, no collective dependency) runs first, and only the
+    depth-r shell bordering a split axis is overwritten with halo-correct
+    values — the collective-permutes have a minimal dependent region, so the
+    scheduler can hide them under the interior work.
     """
+    spec = coeffs.spec
+    r = spec.radius
     c = policy.compute
-    faces = halo_faces(v, fabric)
+    vp = gather_halo(v, fabric, r, corners=spec.needs_corners)
+
+    if not overlap:
+        return padded_apply(coeffs, vp, v.shape, policy=policy).astype(policy.storage)
+
+    # interior: zero-Dirichlet local apply, no collective dependency
     vc = v.astype(c)
-    u = vc  # unit main diagonal (Jacobi preconditioning)
-
+    u = vc
     for name, cf in coeffs.diags.items():
-        ax, sign = _AXIS_OF[name], _SIGN_OF[name]
-        cfc = cf.astype(c)
-        if name in faces:
-            face = faces[name].astype(c)
-            if overlap:
-                u = u + cfc * _shift(vc, ax, sign)
-                # patch the single boundary plane that needed the halo
-                sl = tuple(
-                    (slice(-1, None) if sign > 0 else slice(0, 1)) if i == ax else slice(None)
-                    for i in range(v.ndim)
-                )
-                u = u.at[sl].add(cfc[sl] * face)
-            else:
-                if sign > 0:
-                    shifted = jnp.concatenate([_take_rest(vc, ax, 1), face], axis=ax)
-                else:
-                    shifted = jnp.concatenate([face, _take_rest(vc, ax, -1)], axis=ax)
-                u = u + cfc * shifted
-        else:
-            # Z unsplit (single pod) or 2D: pure local shift, zero-Dirichlet.
-            u = u + cfc * _shift(vc, ax, sign)
+        u = u + cf.astype(c) * _shift_nd(vc, name_offset(name, v.ndim))
+    # shell: overwrite the depth-r slabs that needed halo values (slabs of
+    # different axes overlap at edges/corners; set() is idempotent there)
+    for axis, name, n in fabric.split_info(v.ndim):
+        if name is None or n == 1:
+            continue
+        for side_sl in (slice(0, r), slice(v.shape[axis] - r, None)):
+            reg = tuple(side_sl if i == axis else slice(None) for i in range(v.ndim))
+            u = u.at[reg].set(padded_apply(coeffs, vp, v.shape,
+                                           policy=policy, region=reg))
     return u.astype(policy.storage)
-
-
-def _take_rest(v: jax.Array, axis: int, sign: int) -> jax.Array:
-    sl = slice(1, None) if sign > 0 else slice(0, -1)
-    return v[tuple(sl if i == axis else slice(None) for i in range(v.ndim))]
 
 
 # ---------------------------------------------------------------------------
@@ -186,4 +269,6 @@ def global_apply(mesh, coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = 
     def fn(cf, vv):
         return local_apply(cf, vv, fabric, policy=policy, overlap=overlap)
 
-    return jax.shard_map(fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec)(coeffs, v)
+    from repro.compat import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+                     check_vma=False)(coeffs, v)

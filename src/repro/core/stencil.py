@@ -1,11 +1,25 @@
-"""7-point (3D) and 5-point (2D) stencil operators (paper §IV).
+"""Stencil-family operators (paper §IV, generalized beyond the 7-point shape).
 
-The matrix ``A`` of the discretized PDE has seven nonzero diagonals; after
-diagonal (Jacobi) preconditioning the main diagonal is all ones, so only the
-six off-diagonals are stored (paper: "we only store six other diagonals").
-Coefficients are stored as one mesh-shaped array per diagonal, exactly the
-per-core layout of Listing 1 (xp, xm, yp, ym, zp, zm) generalized from one
-Z-pencil per core to one sub-volume per chip.
+The paper's matrix ``A`` has seven nonzero diagonals; after diagonal (Jacobi)
+preconditioning the main diagonal is all ones, so only the six off-diagonals
+are stored (paper: "we only store six other diagonals").  Coefficients are
+stored as one mesh-shaped array per diagonal, exactly the per-core layout of
+Listing 1 (xp, xm, yp, ym, zp, zm) generalized from one Z-pencil per core to
+one sub-volume per chip.
+
+This module generalizes that layout to a stencil *family* parameterized by a
+:class:`StencilSpec` — pattern ∈ {star, box} and radius r:
+
+* ``star`` r=1 is the paper's 7-point shape (5-point in 2D);
+* ``star`` r=4 is the 25-point shape of Jacquelin et al.'s seismic-RTM
+  stencil (8th-order finite differences, 8 points per axis + center);
+* ``box``  r=1 is the 27-point shape (corner/edge couplings, e.g. trilinear
+  FEM mass matrices and Belli & De Sensi's WSE stencil study).
+
+Each off-diagonal is named canonically (legacy ``xp``/``zm`` names for the
+radius-1 star offsets, ``xp2``-style names for deeper star offsets,
+``d1_-1_0``-style names for box offsets) so a :class:`StencilCoeffs` is
+self-describing: :func:`spec_of` recovers the spec from the diagonal names.
 
 Boundary semantics are zero-Dirichlet: a shift that crosses the mesh edge
 contributes zero (on CS-1 this was achieved by zero-padding the local
@@ -15,7 +29,9 @@ arrays; here by zero-fill of ``ppermute`` at fabric edges / ``jnp.pad``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import functools
+import itertools
+import re
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +49,137 @@ OFFSETS = {
     "yp": (0, 1, 0), "ym": (0, -1, 0),
     "zp": (0, 0, 1), "zm": (0, 0, -1),
 }
+
+_AXES = "xyz"
+_STAR_NAME = re.compile(r"^([xyz])([pm])(\d*)$")
+
+
+def offset_name(off: tuple[int, ...]) -> str:
+    """Canonical diagonal name of a neighbor offset.
+
+    Radius-1 star offsets keep the paper's names (``xp`` .. ``zm``); deeper
+    star offsets append the distance (``xp2`` reads ``v[i+2,j,k]``); offsets
+    touching more than one axis (box stencils) spell the vector out
+    (``d1_-1_0`` reads ``v[i+1,j-1,k]``).
+    """
+    nz = [(i, o) for i, o in enumerate(off) if o != 0]
+    if len(nz) == 1:
+        ax, o = nz[0]
+        base = f"{_AXES[ax]}{'p' if o > 0 else 'm'}"
+        return base if abs(o) == 1 else f"{base}{abs(o)}"
+    return "d" + "_".join(str(o) for o in off)
+
+
+def name_offset(name: str, ndim: int = 3) -> tuple[int, ...]:
+    """Inverse of :func:`offset_name` (also accepts the legacy names)."""
+    if name.startswith("d"):
+        off = tuple(int(t) for t in name[1:].split("_"))
+        if len(off) != ndim:
+            raise ValueError(f"offset name {name!r} is {len(off)}-D, mesh is {ndim}-D")
+        return off
+    m = _STAR_NAME.match(name)
+    if not m:
+        raise ValueError(f"unrecognized diagonal name {name!r}")
+    ax = _AXES.index(m.group(1))
+    dist = int(m.group(3) or 1) * (1 if m.group(2) == "p" else -1)
+    if ax >= ndim:
+        raise ValueError(f"diagonal {name!r} names axis {ax} on a {ndim}-D mesh")
+    return tuple(dist if i == ax else 0 for i in range(ndim))
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A stencil shape: ``star`` (axis-aligned arms) or ``box`` (full cube).
+
+    ``star`` with radius r couples ``2*ndim*r`` neighbors (r=1 => the paper's
+    7-point shape); ``box`` couples ``(2r+1)**ndim - 1`` (r=1 => 27-point).
+    The spec carries no coefficients — it is the *shape* contract shared by
+    the reference apply, the halo exchange (depth = radius, corners only for
+    box), and the fused Pallas kernel.
+    """
+
+    pattern: str            # "star" | "box"
+    radius: int
+    ndim: int = 3
+
+    def __post_init__(self):
+        if self.pattern not in ("star", "box"):
+            raise ValueError(f"pattern must be 'star' or 'box', got {self.pattern!r}")
+        if self.radius < 1:
+            raise ValueError(f"radius must be >= 1, got {self.radius}")
+        if self.ndim not in (2, 3):
+            raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
+
+    @functools.cached_property
+    def offsets(self) -> tuple[tuple[int, ...], ...]:
+        """Neighbor offsets (center excluded), in canonical order.
+
+        Star order extends the legacy (xp, xm, yp, ym, zp, zm): axis-major,
+        then distance, ``+`` before ``-`` — so radius-1 star names/order are
+        bit-identical with the seed's 7-point layout.
+        """
+        if self.pattern == "star":
+            offs = []
+            for ax in range(self.ndim):
+                for dist in range(1, self.radius + 1):
+                    for sign in (+1, -1):
+                        offs.append(tuple(sign * dist if i == ax else 0
+                                          for i in range(self.ndim)))
+            return tuple(offs)
+        rng = range(-self.radius, self.radius + 1)
+        return tuple(o for o in itertools.product(*([rng] * self.ndim))
+                     if any(o))
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(offset_name(o) for o in self.offsets)
+
+    @property
+    def n_offsets(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def n_points(self) -> int:
+        """Stencil points including the center (7, 13, 25, 27, ...)."""
+        return self.n_offsets + 1
+
+    @property
+    def name(self) -> str:
+        return f"{self.pattern}{self.n_points}"
+
+    @property
+    def needs_corners(self) -> bool:
+        """True iff the halo exchange must fill edge/corner halo regions."""
+        return self.pattern == "box"
+
+
+STAR7 = StencilSpec("star", 1, 3)
+STAR13 = StencilSpec("star", 2, 3)
+STAR25 = StencilSpec("star", 4, 3)
+BOX27 = StencilSpec("box", 1, 3)
+
+#: CLI-facing registry; launch/solve.py, configs and benchmarks key off this.
+SPECS = {s.name: s for s in (STAR7, STAR13, STAR25, BOX27)}
+
+
+def get_spec(name: str) -> StencilSpec:
+    try:
+        return SPECS[name]
+    except KeyError:
+        raise KeyError(f"unknown stencil {name!r}; have {sorted(SPECS)}") from None
+
+
+def spec_of(names, ndim: int = 3) -> StencilSpec:
+    """Recover the spec a set of diagonal names was generated from.
+
+    Pattern is ``box`` iff any offset touches more than one axis; radius is
+    the max offset magnitude.  Used by the halo exchange and the kernels to
+    size the halo without threading a spec argument through every call.
+    """
+    offs = [name_offset(n, ndim) for n in names]
+    radius = max(max(abs(o) for o in off) for off in offs)
+    box = any(sum(o != 0 for o in off) > 1 for off in offs)
+    return StencilSpec("box" if box else "star", radius, ndim)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -62,6 +209,15 @@ class StencilCoeffs:
     def dtype(self):
         return next(iter(self.diags.values())).dtype
 
+    @property
+    def spec(self) -> StencilSpec:
+        """The :class:`StencilSpec` implied by the diagonal names."""
+        return spec_of(self.names, self.ndim)
+
+    def offsets(self) -> dict[str, tuple[int, ...]]:
+        """name -> neighbor offset for every stored diagonal."""
+        return {n: name_offset(n, self.ndim) for n in self.diags}
+
     def astype(self, dtype) -> "StencilCoeffs":
         return StencilCoeffs({k: v.astype(dtype) for k, v in self.diags.items()})
 
@@ -90,19 +246,28 @@ def _shift(v: jax.Array, axis: int, offset: int) -> jax.Array:
     ]
 
 
+def _shift_nd(v: jax.Array, off: tuple[int, ...]) -> jax.Array:
+    """v shifted by a (possibly multi-axis) offset, zero fill at the edges."""
+    for axis, o in enumerate(off):
+        if o != 0:
+            v = _shift(v, axis, o)
+    return v
+
+
 def apply_ref(coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32) -> jax.Array:
     """Reference (single-address-space) u = A v.  Oracle for everything else.
 
-    Follows the paper's arithmetic: the products and the 6 accumulating adds
-    run in ``policy.compute`` (Table I counts these as half precision in the
-    mixed policy); the unit diagonal contributes ``v`` directly.
+    Works for every stencil in the family: each stored diagonal contributes
+    ``coeff * v[idx + offset]`` with zero-Dirichlet shifts.  Follows the
+    paper's arithmetic: products and accumulating adds run in
+    ``policy.compute`` (Table I counts these as half precision in the mixed
+    policy); the unit diagonal contributes ``v`` directly.
     """
     c = policy.compute
     u = v.astype(c)
     for name, cf in coeffs.diags.items():
-        off = OFFSETS[name][: v.ndim]
-        axis = next(i for i, o in enumerate(off) if o != 0)
-        u = u + cf.astype(c) * _shift(v, axis, off[axis]).astype(c)
+        off = name_offset(name, v.ndim)
+        u = u + cf.astype(c) * _shift_nd(v, off).astype(c)
     return u.astype(policy.storage)
 
 
@@ -114,20 +279,19 @@ def to_dense(coeffs: StencilCoeffs) -> np.ndarray:
     idx = np.arange(n).reshape(shape)
     for name, cf in coeffs.diags.items():
         cf = np.asarray(cf, dtype=np.float64)
-        off = OFFSETS[name][: len(shape)]
+        off = name_offset(name, len(shape))
         src = idx
         for ax, o in enumerate(off):
             src = np.roll(src, -o, axis=ax)
         # zero out rows whose neighbor crosses the boundary
         valid = np.ones(shape, dtype=bool)
         for ax, o in enumerate(off):
-            if o == 1:
-                sl = [slice(None)] * len(shape)
-                sl[ax] = slice(-1, None)
+            sl = [slice(None)] * len(shape)
+            if o >= 1:
+                sl[ax] = slice(-o, None)
                 valid[tuple(sl)] = False
-            elif o == -1:
-                sl = [slice(None)] * len(shape)
-                sl[ax] = slice(0, 1)
+            elif o <= -1:
+                sl[ax] = slice(0, -o)
                 valid[tuple(sl)] = False
         rows = idx[valid].ravel()
         cols = src[valid].ravel()
@@ -139,16 +303,27 @@ def to_dense(coeffs: StencilCoeffs) -> np.ndarray:
 # Problem generators
 # ---------------------------------------------------------------------------
 
-def poisson(shape: tuple[int, ...], dtype=jnp.float32) -> StencilCoeffs:
-    """Jacobi-preconditioned 7-point (or 5-point) Laplacian.
+def _default_spec(shape, spec: StencilSpec | None) -> StencilSpec:
+    if spec is None:
+        return StencilSpec("star", 1, len(shape))
+    if spec.ndim != len(shape):
+        raise ValueError(f"spec is {spec.ndim}-D but mesh shape {shape} is {len(shape)}-D")
+    return spec
 
-    The raw operator has diagonal ``2*ndim`` and off-diagonals ``-1``;
-    preconditioning by the diagonal gives unit diagonal and ``-1/(2*ndim)``
-    off-diagonals — symmetric positive definite, the classic model problem.
+
+def poisson(shape: tuple[int, ...], dtype=jnp.float32,
+            spec: StencilSpec | None = None) -> StencilCoeffs:
+    """Jacobi-preconditioned constant-coefficient Laplacian-like operator.
+
+    The raw operator has diagonal ``n_offsets`` and off-diagonals ``-1``;
+    preconditioning by the diagonal gives unit diagonal and ``-1/n_offsets``
+    off-diagonals — symmetric and weakly diagonally dominant for every spec
+    (the classic 7-point model problem when ``spec`` is the default star r=1,
+    the 27-point "full-neighborhood" Laplacian for ``BOX27``).
     """
-    names = DIAGS_3D if len(shape) == 3 else DIAGS_2D
-    c = -1.0 / (2 * len(shape))
-    return StencilCoeffs({n: jnp.full(shape, c, dtype=dtype) for n in names})
+    spec = _default_spec(shape, spec)
+    c = -1.0 / spec.n_offsets
+    return StencilCoeffs({n: jnp.full(shape, c, dtype=dtype) for n in spec.names})
 
 
 def random_nonsymmetric(
@@ -157,15 +332,17 @@ def random_nonsymmetric(
     dtype=jnp.float32,
     *,
     dominance: float = 1.25,
+    spec: StencilSpec | None = None,
 ) -> StencilCoeffs:
     """Random nonsymmetric diagonally-dominant stencil (BiCGStab's habitat).
 
     Off-diagonal magnitudes sum to ``1/dominance`` per row so the Jacobi-
     preconditioned matrix is strictly diagonally dominant => BiCGStab
     converges.  Signs are random => A is nonsymmetric, like the upwinded
-    convection-diffusion systems MFIX produces (paper §VI).
+    convection-diffusion systems MFIX produces (paper §VI).  Works for any
+    spec in the family (star25 and box27 included).
     """
-    names = DIAGS_3D if len(shape) == 3 else DIAGS_2D
+    names = _default_spec(shape, spec).names
     keys = jax.random.split(key, len(names) + 1)
     mags = {
         n: jax.random.uniform(k, shape, jnp.float32, 0.05, 1.0)
@@ -210,6 +387,47 @@ def convection_diffusion(
     )
 
 
+# Central-difference second-derivative weights a_k (k = 1..r) of order 2r;
+# a_0 is the center weight.  r=4 is the 8th-order arm of Jacquelin et al.'s
+# 25-point seismic-RTM stencil.
+_FD2_WEIGHTS = {
+    1: (-2.0, (1.0,)),
+    2: (-5.0 / 2.0, (4.0 / 3.0, -1.0 / 12.0)),
+    3: (-49.0 / 18.0, (3.0 / 2.0, -3.0 / 20.0, 1.0 / 90.0)),
+    4: (-205.0 / 72.0, (8.0 / 5.0, -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0)),
+}
+
+
+def high_order_star(
+    shape: tuple[int, ...],
+    radius: int = 4,
+    dtype=jnp.float32,
+    *,
+    dominance: float = 1.25,
+) -> StencilCoeffs:
+    """Seismic-flavored high-order star operator (Jacquelin et al.'s shape).
+
+    Uses the order-2r central-difference second-derivative weights on each
+    axis (r=4 => the 25-point star of the seismic RTM stencil), embedded in
+    an implicit-timestep operator ``I - theta * Laplacian_2r`` and Jacobi
+    preconditioned.  ``theta`` is chosen so the off-diagonal row sum is
+    ``1/dominance`` — strictly diagonally dominant, so the solve converges
+    while keeping the true sign structure of the FD weights (alternating
+    along each arm).
+    """
+    if radius not in _FD2_WEIGHTS:
+        raise ValueError(f"radius must be in {sorted(_FD2_WEIGHTS)}, got {radius}")
+    spec = StencilSpec("star", radius, len(shape))
+    _, arm = _FD2_WEIGHTS[radius]
+    total = len(shape) * 2 * sum(abs(a) for a in arm)
+    scale = 1.0 / (dominance * total)
+    diags = {}
+    for off in spec.offsets:
+        dist = max(abs(o) for o in off)
+        diags[offset_name(off)] = jnp.full(shape, -arm[dist - 1] * scale, dtype=dtype)
+    return StencilCoeffs(diags)
+
+
 def rhs_for_solution(coeffs: StencilCoeffs, x_true: jax.Array) -> jax.Array:
     """b = A @ x_true in float64-ish (f32) precision, for manufactured tests."""
     return apply_ref(coeffs.astype(jnp.float32), x_true.astype(jnp.float32))
@@ -227,3 +445,37 @@ def flops_per_point(ndim: int = 3) -> int:
 def words_per_point(ndim: int = 3) -> int:
     """Memory words touched per meshpoint per SpMV: 6 coeffs + v + u."""
     return 2 * ndim + 2
+
+
+def spec_flops_per_point(spec: StencilSpec) -> int:
+    """SpMV flops per meshpoint for any family member: mul+add per offset.
+
+    star7 => 12 (Table I's 24/2), star25 => 48, box27 => 52.
+    """
+    return 2 * spec.n_offsets
+
+
+def spec_words_per_point(spec: StencilSpec) -> int:
+    """Memory words touched per meshpoint per SpMV: coeffs + v + u."""
+    return spec.n_offsets + 2
+
+
+def halo_words_per_spmv(spec: StencilSpec, block: tuple[int, ...],
+                        split_axes: tuple[int, ...] = (0, 1)) -> int:
+    """Words exchanged per SpMV by one shard: depth-r slabs on split axes.
+
+    Counts both directions; for box stencils the sequential corner-carrying
+    exchange also ships the already-received halo of earlier axes.
+    """
+    r = spec.radius
+    words = 0
+    padded = list(block)
+    for ax in split_axes:
+        slab = r
+        for i, n in enumerate(padded):
+            if i != ax:
+                slab *= n
+        words += 2 * slab
+        if spec.needs_corners:
+            padded[ax] += 2 * r
+    return words

@@ -20,12 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import HAS_PL_ELEMENT
 from repro.core.stencil import StencilCoeffs
 from repro.kernels.stencil7.ops import ORDER, pick_zc
 
 
 def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,
-            u_ref, d1_ref, d2_ref, *, accum_dtype, two_dots):
+            u_ref, d1_ref, d2_ref, *, accum_dtype, two_dots, block, zc):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -34,6 +35,10 @@ def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,
         d2_ref[...] = jnp.zeros_like(d2_ref)
 
     vp = vp_ref[...]
+    if not HAS_PL_ELEMENT:
+        # padded iterate fully resident: cut this step's z-window by hand
+        bx, by = block
+        vp = jax.lax.dynamic_slice(vp, (0, 0, i * zc), (bx + 2, by + 2, zc + 2))
     c = lambda a: a.astype(accum_dtype)
     u = c(vp[1:-1, 1:-1, 1:-1])
     u += c(xp_ref[...]) * c(vp[2:, 1:-1, 1:-1])
@@ -56,13 +61,17 @@ def _call(coeffs: StencilCoeffs, v: jax.Array, w: jax.Array, *, two_dots: bool,
     bx, by, Z = v.shape
     zc = pick_zc(bx, by, Z, jnp.dtype(v.dtype).itemsize)
     vp = jnp.pad(v, ((1, 1), (1, 1), (1, 1)))
-    vspec = pl.BlockSpec(
-        (pl.Element(bx + 2), pl.Element(by + 2), pl.Element(zc + 2)),
-        lambda i: (0, 0, i * zc))
+    if HAS_PL_ELEMENT:
+        vspec = pl.BlockSpec(
+            (pl.Element(bx + 2), pl.Element(by + 2), pl.Element(zc + 2)),
+            lambda i: (0, 0, i * zc))
+    else:
+        vspec = pl.BlockSpec(vp.shape, lambda i: (0, 0, 0))
     cspec = pl.BlockSpec((bx, by, zc), lambda i: (0, 0, i))
     sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
     u, d1, d2 = pl.pallas_call(
-        functools.partial(_kernel, accum_dtype=accum_dtype, two_dots=two_dots),
+        functools.partial(_kernel, accum_dtype=accum_dtype, two_dots=two_dots,
+                          block=(bx, by), zc=zc),
         grid=(Z // zc,),
         in_specs=[vspec, cspec] + [cspec] * 6,
         out_specs=[cspec, sspec, sspec],

@@ -1,64 +1,24 @@
-"""Fused 7-point stencil SpMV Pallas kernel (the paper's Listing 1, TPU-native).
+"""7-point stencil SpMV kernel — thin alias of the generalized family kernel.
 
-On the CS-1 the SpMV runs as six SIMD multiply threads feeding FIFO-buffered
-add tasks (Fig. 4).  On TPU the idiomatic equivalent is one fused VMEM pass:
-the block of the iterate plus its one-point halo is resident in VMEM, the six
-off-diagonal products and the unit-diagonal add all happen in registers, and
-the result streams back — one read of v, one read of each coefficient
-diagonal, one write of u.  No FIFOs, no task scheduler: the XLA/Mosaic
-pipeline plays that role.
-
-Tiling: the fabric-local block is (bx, by, Z); Z is split into ``zc`` chunks
-(grid dimension) so arbitrary Z fits VMEM.  The halo'd input block is
-addressed with ``pl.Element`` so consecutive grid steps read overlapping
-(zc+2)-windows of the z-padded iterate — the in-VMEM analogue of the paper's
-loopback channel for the z +/- 1 terms.
-
-VMEM per step ~= (bx+2)(by+2)(zc+2) + 7*bx*by*zc halfwords; the ops wrapper
-picks zc to stay under the budget.
+Historically this module carried its own fused Pallas kernel (the paper's
+Listing 1, TPU-native).  That kernel now lives, shape-parameterized, in
+:mod:`repro.kernels.stencil_nd`; this wrapper pins the radius-1 star
+specialization and the legacy (xp, xm, yp, ym, zp, zm) argument order so
+existing callers and tests are untouched.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-
-def _kernel(vp_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref, u_ref,
-            *, accum_dtype):
-    vp = vp_ref[...]                       # (bx+2, by+2, zc+2) with halo
-    c = lambda a: a.astype(accum_dtype)
-    center = vp[1:-1, 1:-1, 1:-1]
-    u = c(center)                          # unit main diagonal (preconditioned)
-    u += c(xp_ref[...]) * c(vp[2:, 1:-1, 1:-1])
-    u += c(xm_ref[...]) * c(vp[:-2, 1:-1, 1:-1])
-    u += c(yp_ref[...]) * c(vp[1:-1, 2:, 1:-1])
-    u += c(ym_ref[...]) * c(vp[1:-1, :-2, 1:-1])
-    u += c(zp_ref[...]) * c(vp[1:-1, 1:-1, 2:])
-    u += c(zm_ref[...]) * c(vp[1:-1, 1:-1, :-2])
-    u_ref[...] = u.astype(u_ref.dtype)
+from repro.core.stencil import STAR7
+from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
 
 
 def stencil7_pallas(v_padded: jax.Array, coeffs: list[jax.Array], *,
                     zc: int, accum_dtype=jnp.float32, interpret: bool = True):
-    """v_padded: (bx+2, by+2, Z+2) zero-padded iterate; coeffs: 6 x (bx,by,Z)."""
-    bx2, by2, Zp2 = v_padded.shape
-    bx, by, Z = bx2 - 2, by2 - 2, Zp2 - 2
-    assert Z % zc == 0, (Z, zc)
-    grid = (Z // zc,)
-    vspec = pl.BlockSpec(
-        (pl.Element(bx + 2), pl.Element(by + 2), pl.Element(zc + 2)),
-        lambda i: (0, 0, i * zc),
-    )
-    cspec = pl.BlockSpec((bx, by, zc), lambda i: (0, 0, i))
-    return pl.pallas_call(
-        functools.partial(_kernel, accum_dtype=accum_dtype),
-        grid=grid,
-        in_specs=[vspec] + [cspec] * 6,
-        out_specs=cspec,
-        out_shape=jax.ShapeDtypeStruct((bx, by, Z), v_padded.dtype),
-        interpret=interpret,
-    )(v_padded, *coeffs)
+    """v_padded: (bx+2, by+2, Z+2) zero-padded iterate; coeffs: 6 x (bx,by,Z)
+    in the order xp, xm, yp, ym, zp, zm (== STAR7.offsets order)."""
+    return stencil_nd_pallas(v_padded, coeffs, STAR7.offsets, radius=1,
+                             zc=zc, accum_dtype=accum_dtype, interpret=interpret)

@@ -1,66 +1,36 @@
-"""jit'd wrapper: VMEM budgeting, padding, and the drop-in local-apply that
-plugs into the distributed solver (`apply_impl=` of solve_distributed)."""
+"""7-point wrappers — thin aliases of the generalized stencil_nd package.
+
+``stencil7_apply`` / ``pallas_local_apply`` keep their historical signatures
+(they predate the stencil family) and forward to the radius-1 star
+specialization of :mod:`repro.kernels.stencil_nd`.
+"""
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.stencil import StencilCoeffs
-from repro.kernels.stencil7.kernel import stencil7_pallas
+from repro.core.stencil import STAR7, StencilCoeffs
+from repro.kernels.stencil_nd.ops import (  # noqa: F401  (re-exported API)
+    VMEM_BUDGET_BYTES,
+    pick_zc,
+)
+from repro.kernels import stencil_nd
 
-# order must match kernel.py signature
+# order must match kernel.py signature (== STAR7.names)
 ORDER = ("xp", "xm", "yp", "ym", "zp", "zm")
 
-VMEM_BUDGET_BYTES = 64 * 2 ** 20     # half of a v5e core's ~128MB VMEM
 
-
-def pick_zc(bx: int, by: int, Z: int, itemsize: int) -> int:
-    """Largest Z chunk whose working set fits the VMEM budget."""
-    zc = Z
-    while zc > 1:
-        vmem = ((bx + 2) * (by + 2) * (zc + 2) + 7 * bx * by * zc) * itemsize
-        if vmem <= VMEM_BUDGET_BYTES and Z % zc == 0:
-            return zc
-        zc //= 2
-    return 1
-
-
-@functools.partial(jax.jit, static_argnames=("accum_dtype", "interpret"))
 def stencil7_apply(coeffs: StencilCoeffs, v: jax.Array, *,
                    accum_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
     """u = A v on a local block (zero-Dirichlet at block edges)."""
     assert v.ndim == 3, "stencil7 kernel is 3D"
-    bx, by, Z = v.shape
-    zc = pick_zc(bx, by, Z, jnp.dtype(v.dtype).itemsize)
-    vp = jnp.pad(v, ((1, 1), (1, 1), (1, 1)))
-    cl = [coeffs.diags[n] for n in ORDER]
-    return stencil7_pallas(vp, cl, zc=zc, accum_dtype=accum_dtype,
-                           interpret=interpret)
+    return stencil_nd.stencil_apply(coeffs, v, spec=STAR7,
+                                    accum_dtype=accum_dtype, interpret=interpret)
 
 
 def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
                        interpret: bool = True):
-    """Drop-in for halo.local_apply: Pallas interior + face-patch halos.
-
-    The kernel computes the zero-Dirichlet interior contribution; the four
-    (or six, multi-pod) received faces each patch one boundary plane — the
-    same decomposition halo.local_apply uses with overlap=True.
-    """
-    from repro.core.halo import halo_faces, _AXIS_OF, _SIGN_OF
-
-    faces = halo_faces(v, fabric)
-    u = stencil7_apply(coeffs.astype(policy.storage), v.astype(policy.storage),
-                       accum_dtype=policy.compute, interpret=interpret)
-    c = policy.compute
-    u = u.astype(c)
-    for name, face in faces.items():
-        ax, sign = _AXIS_OF[name], _SIGN_OF[name]
-        sl = tuple(
-            (slice(-1, None) if sign > 0 else slice(0, 1)) if i == ax else slice(None)
-            for i in range(v.ndim)
-        )
-        u = u.at[sl].add(coeffs.diags[name][sl].astype(c) * face.astype(c))
-    return u.astype(policy.storage)
+    """Drop-in for halo.local_apply: halo exchange + fused Pallas SpMV."""
+    return stencil_nd.pallas_local_apply(coeffs, v, fabric, policy=policy,
+                                         overlap=overlap, interpret=interpret)

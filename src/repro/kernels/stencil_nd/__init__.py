@@ -1,0 +1,6 @@
+from repro.kernels.stencil_nd.ops import (  # noqa: F401
+    pallas_local_apply,
+    pick_zc,
+    stencil_apply,
+)
+from repro.kernels.stencil_nd.ref import stencil_nd_ref  # noqa: F401

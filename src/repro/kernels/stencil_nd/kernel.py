@@ -1,0 +1,87 @@
+"""Generalized fused stencil SpMV Pallas kernel — any spec in the family.
+
+The 7-point kernel (kernels/stencil7) lowers the paper's Listing 1 to one
+fused VMEM pass.  This package lowers *any* :class:`~repro.core.stencil
+.StencilSpec` the same way: the local block of the iterate plus its
+radius-r halo is resident in VMEM, every off-diagonal product reads a
+statically shifted (r,r,r)-halo'd window of that block, and the accumulated
+result streams back — one read of v, one read of each coefficient diagonal,
+one write of u, for 7, 13, 25 or 27 points alike.
+
+Tiling follows stencil7: the fabric-local block is (bx, by, Z); Z is split
+into ``zc`` chunks (grid dimension) so arbitrary Z fits VMEM.  With
+element-indexed BlockSpecs (``pl.Element``) consecutive grid steps read
+overlapping (zc+2r)-windows of the z-padded iterate — the in-VMEM analogue
+of the paper's loopback channel, now r planes deep.  On jax versions
+without ``pl.Element`` the padded iterate stays fully resident and the
+window is cut with ``lax.dynamic_slice`` inside the kernel body instead
+(see repro.compat.HAS_PL_ELEMENT).
+
+VMEM per step ~= (bx+2r)(by+2r)(zc+2r) + (n_offsets+1)*bx*by*zc halfwords;
+the ops wrapper picks zc to stay under the budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import HAS_PL_ELEMENT
+
+
+def _kernel(vp_ref, *refs, offsets, radius, block, zc, accum_dtype, resident):
+    cf_refs, u_ref = refs[:-1], refs[-1]
+    bx, by, _ = block
+    r = radius
+    vp = vp_ref[...]
+    if resident:
+        # whole padded array resident: cut this step's z-window by hand
+        i = pl.program_id(0)
+        vp = jax.lax.dynamic_slice(
+            vp, (0, 0, i * zc), (bx + 2 * r, by + 2 * r, zc + 2 * r))
+    c = lambda a: a.astype(accum_dtype)
+    win = lambda off: vp[r + off[0]:r + off[0] + bx,
+                         r + off[1]:r + off[1] + by,
+                         r + off[2]:r + off[2] + zc]
+    u = c(win((0, 0, 0)))        # unit main diagonal (Jacobi preconditioned)
+    for cf_ref, off in zip(cf_refs, offsets):
+        u += c(cf_ref[...]) * c(win(off))
+    u_ref[...] = u.astype(u_ref.dtype)
+
+
+def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
+                      offsets: tuple[tuple[int, int, int], ...], *,
+                      radius: int, zc: int, accum_dtype=jnp.float32,
+                      interpret: bool = True):
+    """u = A v on one local block.
+
+    ``v_padded``: (bx+2r, by+2r, Z+2r) iterate with halo (zero-padded for a
+    standalone block, fabric-filled by ``core.halo.gather_halo`` inside the
+    distributed solver).  ``coeffs[i]`` is the (bx, by, Z) diagonal that
+    multiplies the ``offsets[i]``-shifted window.
+    """
+    r = radius
+    bx, by, Z = (s - 2 * r for s in v_padded.shape)
+    assert Z % zc == 0, (Z, zc)
+    grid = (Z // zc,)
+    if HAS_PL_ELEMENT:
+        vspec = pl.BlockSpec(
+            (pl.Element(bx + 2 * r), pl.Element(by + 2 * r), pl.Element(zc + 2 * r)),
+            lambda i: (0, 0, i * zc),
+        )
+    else:
+        vspec = pl.BlockSpec(v_padded.shape, lambda i: (0, 0, 0))
+    cspec = pl.BlockSpec((bx, by, zc), lambda i: (0, 0, i))
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, offsets=tuple(offsets), radius=r, block=(bx, by, Z),
+            zc=zc, accum_dtype=accum_dtype, resident=not HAS_PL_ELEMENT),
+        grid=grid,
+        in_specs=[vspec] + [cspec] * len(coeffs),
+        out_specs=cspec,
+        out_shape=jax.ShapeDtypeStruct((bx, by, Z), v_padded.dtype),
+        interpret=interpret,
+    )(v_padded, *coeffs)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the generalized stencil kernel: identical to
+core.stencil.apply_ref restricted to a local (zero-Dirichlet) block, but
+taking the kernel's own argument layout (ordered coeff list + offsets) so
+kernel tests exercise the argument contract too."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _shift_nd(v, off):
+    for axis, o in enumerate(off):
+        if o == 0:
+            continue
+        pad = [(0, 0)] * v.ndim
+        sl = [slice(None)] * v.ndim
+        if o > 0:
+            pad[axis] = (0, o)
+            sl[axis] = slice(o, None)
+        else:
+            pad[axis] = (-o, 0)
+            sl[axis] = slice(0, o)
+        v = jnp.pad(v, pad)[tuple(sl)]
+    return v
+
+
+def stencil_nd_ref(v: jax.Array, coeffs: list[jax.Array],
+                   offsets, accum_dtype=jnp.float32) -> jax.Array:
+    """coeffs[i] multiplies the offsets[i]-shifted iterate (kernel order)."""
+    vc = v.astype(accum_dtype)
+    u = vc
+    for cf, off in zip(coeffs, offsets):
+        u = u + cf.astype(accum_dtype) * _shift_nd(vc, off)
+    return u.astype(v.dtype)

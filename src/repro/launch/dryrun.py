@@ -176,7 +176,8 @@ def _compile_step(cfg: ArchConfig, shape, mesh):
     """Lower+compile the cell's step under the ambient mesh."""
     params = M.abstract_params(cfg, mesh)
     batch = M.input_specs(cfg, shape, mesh)
-    with jax.sharding.set_mesh(mesh):
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
         if shape.kind == "train":
             opt = M.abstract_opt_state(cfg, mesh)
             step = M.make_train_step(cfg)

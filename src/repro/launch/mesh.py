@@ -21,11 +21,9 @@ import jax
 
 
 def _make_mesh(shape, axis_names):
-    """jax.make_mesh with explicit Auto axis types (silences 0.8->0.9 warning)."""
-    return jax.make_mesh(
-        shape, axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
-    )
+    """jax.make_mesh, version-gated (see repro.compat.make_mesh)."""
+    from repro.compat import make_mesh
+    return make_mesh(shape, axis_names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,11 +1,16 @@
-"""Stencil-solver driver: the paper's experiment at CPU scale.
+"""Stencil-solver driver: the paper's experiment at CPU scale, for the
+whole stencil family.
 
     PYTHONPATH=src python -m repro.launch.solve --mesh 48 48 32 --policy bf16_mixed
+    PYTHONPATH=src python -m repro.launch.solve --stencil star25 --mesh 24 24 16
+    PYTHONPATH=src python -m repro.launch.solve --stencil box27 --mesh 24 24 16
 
-Builds a diagonally-dominant nonsymmetric 7-point system (the class MFIX
-produces), solves it with distributed BiCGStab on the available device
-fabric, and reports iterations / residuals / timings, with the iterative-
-refinement option for f32-grade accuracy from a 16-bit solve.
+Builds a diagonally-dominant system with the requested stencil shape
+(``star7`` is the paper's 7-point MFIX class; ``star25`` the high-order
+seismic shape of Jacquelin et al.; ``box27`` the full-neighborhood cube),
+solves it with distributed BiCGStab on the available device fabric, and
+reports iterations / residuals / timings, with the iterative-refinement
+option for f32-grade accuracy from a 16-bit solve.
 """
 
 from __future__ import annotations
@@ -21,16 +26,49 @@ from repro.core import bicgstab, precision, stencil
 from repro.launch.mesh import make_mesh_for_devices
 
 
+def build_problem(args, spec: stencil.StencilSpec):
+    """Coefficients for the requested (problem, spec) pair."""
+    shape = tuple(args.mesh)
+    key = jax.random.PRNGKey(0)
+    problem = args.problem
+    if problem is None:  # shape-appropriate default
+        if spec == stencil.STAR7:
+            problem = "convdiff"
+        elif spec.pattern == "star":
+            problem = "seismic"
+        else:
+            problem = "random"
+    if problem == "random":
+        return problem, stencil.random_nonsymmetric(key, shape, spec=spec)
+    if problem == "poisson":
+        return problem, stencil.poisson(shape, spec=spec)
+    if problem == "seismic":
+        if spec.pattern != "star":
+            raise SystemExit("--problem seismic needs a star stencil")
+        return problem, stencil.high_order_star(shape, spec.radius)
+    if problem == "convdiff":
+        if spec != stencil.STAR7:
+            raise SystemExit("--problem convdiff is the 7-point MFIX class; "
+                             "use seismic/random/poisson for other stencils")
+        return problem, stencil.convection_diffusion(shape)
+    raise SystemExit(f"unknown problem {problem!r}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, nargs=3, default=[48, 48, 32],
                     metavar=("X", "Y", "Z"))
+    ap.add_argument("--stencil", default="star7", choices=sorted(stencil.SPECS),
+                    help="stencil shape: star7 (paper), star13, star25 "
+                         "(seismic RTM), box27")
     ap.add_argument("--policy", default="bf16_mixed",
                     choices=sorted(precision.POLICIES))
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--maxiter", type=int, default=200)
-    ap.add_argument("--problem", default="convdiff",
-                    choices=["convdiff", "random", "poisson"])
+    ap.add_argument("--problem", default=None,
+                    choices=["convdiff", "random", "poisson", "seismic"],
+                    help="default: convdiff for star7, seismic for deeper "
+                         "stars, random for box")
     ap.add_argument("--refine", action="store_true",
                     help="iterative refinement to f32 accuracy")
     ap.add_argument("--paper-separate-reductions", action="store_true",
@@ -38,17 +76,14 @@ def main() -> None:
     args = ap.parse_args()
 
     shape = tuple(args.mesh)
+    spec = stencil.get_spec(args.stencil)
     pol = precision.get_policy(args.policy)
     mesh = make_mesh_for_devices()
-    print(f"problem {shape} on fabric {dict(mesh.shape)} policy={pol.name}")
+    problem, cf = build_problem(args, spec)
+    print(f"problem {problem}/{spec.name} (radius {spec.radius}, "
+          f"{spec.n_points} points) {shape} on fabric {dict(mesh.shape)} "
+          f"policy={pol.name}")
 
-    key = jax.random.PRNGKey(0)
-    if args.problem == "random":
-        cf = stencil.random_nonsymmetric(key, shape)
-    elif args.problem == "poisson":
-        cf = stencil.poisson(shape)
-    else:
-        cf = stencil.convection_diffusion(shape)
     x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
     b = stencil.rhs_for_solution(cf, x_true)
 

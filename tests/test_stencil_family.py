@@ -1,0 +1,140 @@
+"""Stencil-family (StencilSpec) unit tests: shape algebra, dense oracle
+agreement for star25/box27, generators, and accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stencil
+
+
+def test_spec_shapes_and_names():
+    assert stencil.STAR7.n_points == 7
+    assert stencil.STAR13.n_points == 13
+    assert stencil.STAR25.n_points == 25
+    assert stencil.BOX27.n_points == 27
+    # the radius-1 star keeps the paper's exact names and order
+    assert stencil.STAR7.names == stencil.DIAGS_3D
+    assert stencil.StencilSpec("star", 1, 2).names == stencil.DIAGS_2D
+    # registry round trip
+    for name in ("star7", "star13", "star25", "box27"):
+        assert stencil.get_spec(name).name == name
+    with pytest.raises(KeyError):
+        stencil.get_spec("star999")
+
+
+def test_offset_names_round_trip():
+    for spec in (stencil.STAR7, stencil.STAR13, stencil.STAR25, stencil.BOX27):
+        for off, name in zip(spec.offsets, spec.names):
+            assert stencil.name_offset(name, spec.ndim) == off
+        # spec reconstruction from names alone
+        assert stencil.spec_of(spec.names, spec.ndim) == spec
+
+
+def test_coeffs_carry_their_spec():
+    cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), (4, 4, 4),
+                                     spec=stencil.BOX27)
+    assert cf.spec == stencil.BOX27
+    cf7 = stencil.poisson((4, 4, 4))
+    assert cf7.spec == stencil.STAR7
+
+
+@pytest.mark.parametrize("specname", ["star13", "star25", "box27"])
+def test_apply_matches_dense_oracle(specname):
+    """Acceptance: star25 and box27 apply == dense matvec to tolerance."""
+    spec = stencil.get_spec(specname)
+    shape = (5, 6, 7)
+    cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape, spec=spec)
+    v = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    u = stencil.apply_ref(cf, v)
+    A = stencil.to_dense(cf)
+    u_dense = (A @ np.asarray(v, np.float64).ravel()).reshape(shape)
+    np.testing.assert_allclose(np.asarray(u), u_dense, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_dirichlet_deep_offsets():
+    """A star25 arm reaching past the mesh edge must contribute zero."""
+    shape = (5, 5, 5)
+    cf = stencil.StencilCoeffs({
+        n: jnp.full(shape, 1.0, jnp.float32) for n in stencil.STAR25.names})
+    v = jnp.zeros(shape, jnp.float32).at[4, 4, 4].set(1.0)
+    u = stencil.apply_ref(cf, v)
+    # (0,4,4) reads x+1..x+4: x+4 lands on the impulse
+    assert u[0, 4, 4] == 1.0
+    # (0,0,0) has no arm reaching (4,4,4) (star has no diagonal coupling)
+    assert u[0, 0, 0] == 0.0
+
+
+def test_box27_couples_corners():
+    shape = (3, 3, 3)
+    cf = stencil.StencilCoeffs({
+        n: jnp.full(shape, 1.0, jnp.float32) for n in stencil.BOX27.names})
+    v = jnp.zeros(shape, jnp.float32).at[1, 1, 1].set(1.0)
+    u = stencil.apply_ref(cf, v)
+    # every cell of the 3x3x3 cube sees the center impulse exactly once
+    np.testing.assert_allclose(np.asarray(u), np.ones(shape))
+
+
+def test_poisson_generalizes_symmetric_dominant():
+    for spec in (stencil.STAR13, stencil.BOX27):
+        cf = stencil.poisson((4, 4, 4), spec=spec)
+        A = stencil.to_dense(cf)
+        np.testing.assert_allclose(A, A.T, rtol=0, atol=0)
+        np.testing.assert_allclose(np.diag(A), 1.0)
+        off = np.abs(A - np.eye(A.shape[0])).sum(axis=1)
+        assert off.max() <= 1.0 + 1e-6
+
+
+def test_high_order_star_is_dominant_and_has_fd_signs():
+    cf = stencil.high_order_star((5, 5, 5), radius=4, dominance=1.25)
+    assert cf.spec == stencil.STAR25
+    A = stencil.to_dense(cf)
+    off = np.abs(A - np.eye(A.shape[0])).sum(axis=1)
+    assert off.max() <= 1.0 / 1.25 + 1e-6
+    # 8th-order FD weights alternate sign along an arm: -, +, -, +
+    xp1 = float(cf.diags["xp"][2, 2, 2])
+    xp2 = float(cf.diags["xp2"][2, 2, 2])
+    xp3 = float(cf.diags["xp3"][2, 2, 2])
+    assert xp1 < 0 < xp2 and xp3 < 0
+    with pytest.raises(ValueError):
+        stencil.high_order_star((5, 5, 5), radius=9)
+
+
+def test_solver_converges_on_family():
+    """star25 and box27 systems solve end-to-end with the reference solver."""
+    from repro.core import bicgstab
+    shape = (6, 6, 6)
+    for spec in (stencil.STAR25, stencil.BOX27):
+        cf = stencil.random_nonsymmetric(jax.random.PRNGKey(2), shape, spec=spec)
+        x_true = jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32)
+        b = stencil.rhs_for_solution(cf, x_true)
+        res = bicgstab.solve_ref(cf, b, tol=1e-8, maxiter=400)
+        assert bool(res.converged), spec.name
+        np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_true),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_spec_accounting():
+    assert stencil.spec_flops_per_point(stencil.STAR7) == stencil.flops_per_point(3)
+    assert stencil.spec_flops_per_point(stencil.STAR25) == 48
+    assert stencil.spec_flops_per_point(stencil.BOX27) == 52
+    assert stencil.spec_words_per_point(stencil.STAR7) == stencil.words_per_point(3)
+    # depth-r halo moves r-thick slabs; box corners ride on padded slabs
+    block = (8, 8, 8)
+    star = stencil.halo_words_per_spmv(stencil.STAR13, block)
+    assert star == 2 * (2 * 8 * 8) * 2
+    box = stencil.halo_words_per_spmv(stencil.BOX27, block)
+    assert box == 2 * 8 * 8 + 2 * 10 * 8  # y slabs carry the x halo
+
+
+def test_family_cell_configs():
+    from repro.configs.stencil_box27 import BOX27_CELLS, ops_per_meshpoint_box27
+    from repro.configs.stencil_star25_seismic import (
+        SEISMIC_CELLS, ops_per_meshpoint_star25)
+    for cells in (SEISMIC_CELLS, BOX27_CELLS):
+        for cell in cells.values():
+            spec = stencil.get_spec(cell.stencil)
+            t = (ops_per_meshpoint_star25() if spec.pattern == "star"
+                 else ops_per_meshpoint_box27())
+            assert t["total"] == 2 * stencil.spec_flops_per_point(spec) + 8 + 12

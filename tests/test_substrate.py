@@ -114,9 +114,8 @@ def test_checkpoint_reshard_on_load(subproc):
         cm = CheckpointManager(d)
         cm.save(5, {"x": x})
         # restore onto a DIFFERENT layout: 4 of the 8 devices, model-only mesh
-        mesh4 = jax.make_mesh((4,), ("model",),
-                              axis_types=(jax.sharding.AxisType.Auto,),
-                              devices=jax.devices()[:4])
+        from repro.compat import make_mesh
+        mesh4 = make_mesh((4,), ("model",), devices=jax.devices()[:4])
         like = jax.ShapeDtypeStruct((8, 8), jnp.float32,
                                     sharding=NamedSharding(mesh4, P("model", None)))
         (restored, step) = cm.restore(5, {"x": like})
