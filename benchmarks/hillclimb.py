@@ -17,7 +17,6 @@ import argparse
 import dataclasses
 import json
 
-import jax
 
 
 HBM_BW = 819e9

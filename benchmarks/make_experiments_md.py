@@ -2,11 +2,10 @@
 artifacts:  PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
 
-import glob
 import json
 import os
 
-from benchmarks.roofline_report import dryrun_table, fmt_bytes, load_cells, roofline_table
+from benchmarks.roofline_report import dryrun_table, load_cells, roofline_table
 
 
 def _hc(name):

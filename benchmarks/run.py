@@ -19,8 +19,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (allreduce_model, iteration_time, precision_residual,
-                            roofline_report, simple_step, stencil_family,
-                            strong_scaling, table1_opcounts)
+                            roofline_report, simple_step, solver_matrix,
+                            stencil_family, strong_scaling, table1_opcounts)
 
     benches = {
         "table1_opcounts": table1_opcounts.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "iteration_time": iteration_time.run,
         "precision_residual": precision_residual.run,
         "stencil_family": stencil_family.run,
+        "solver_matrix": solver_matrix.run,
         "simple_step": simple_step.run,
         "strong_scaling": strong_scaling.run,
     }

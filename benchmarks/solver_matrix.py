@@ -1,0 +1,225 @@
+"""Solver-stack matrix sweep: {solver x backend x precond x stencil}.
+
+Three blocks, one JSON (``results/solver_matrix.json``):
+
+* ``matrix`` — every registered solver and operator backend crossed with
+  the preconditioners over the stencil family, each cell an end-to-end
+  distributed solve (iterations, residual, wall time).  The problem tracks
+  the solver: CG gets the symmetric Poisson operator, BiCGStab its
+  nonsymmetric habitat.
+* ``precond_headline`` — the acceptance experiment: unpreconditioned vs
+  Jacobi vs Chebyshev BiCGStab on the Poisson star7 48x48x32 problem
+  (paper-class mesh), reporting the iteration reduction; plus the raw
+  variable-diagonal heterogeneous problem where Jacobi does real work.
+* ``collectives`` — HLO AllReduce / collective-permute counts for one
+  distributed iteration of the SPMD and Pallas-fused backends on a fake
+  2x2 fabric (both must show the 3-AllReduce fused schedule).
+
+Emits ``name,metric,value`` CSV rows (the benchmarks/run.py contract).
+``--smoke`` shrinks every mesh for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+MATRIX_SHAPES = ("star7", "star25", "box27")
+_SUBPROC_DEVICES = 4
+
+_COLLECTIVE_SNIPPET = """
+    import json
+    import jax, jax.numpy as jnp
+    from repro.core import bicgstab, precision, stencil
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices({n})
+    shape = {shape}
+    cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape)
+    structs = [jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cf)]
+    f32 = jax.ShapeDtypeStruct(shape, jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    structs += [f32, f32, f32, f32, scalar]
+    out = {{}}
+    for backend in ("spmd", "pallas"):
+        it = bicgstab.make_iteration_fn(mesh, policy=precision.F32,
+                                        backend=backend, fused_reductions=True)
+        text = jax.jit(it).lower(*structs).as_text()
+        out[backend] = {{
+            "allreduce_per_iter": text.count("all_reduce") + text.count("all-reduce"),
+            "ppermute_per_iter": (text.count("collective_permute")
+                                  + text.count("collective-permute")),
+        }}
+    print(json.dumps(out))
+"""
+
+
+def measure_collectives(shape, n_devices: int = _SUBPROC_DEVICES) -> dict:
+    """Per-iteration HLO collective counts for both distributed backends."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent(_COLLECTIVE_SNIPPET.format(n=n_devices,
+                                                      shape=tuple(shape)))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"collective-count subprocess failed:\n{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _solve_cell(mesh, cf, b, x_true, *, solver, backend, precond, tol,
+                maxiter, policy):
+    import jax
+    import numpy as np
+    from repro.core import bicgstab
+    from repro.core.precond import PrecondConfig
+
+    t0 = time.time()
+    res = bicgstab.solve_distributed(
+        mesh, cf, b, tol=tol, maxiter=maxiter, policy=policy,
+        solver=solver, backend=backend,
+        precond=PrecondConfig(name=precond))
+    jax.block_until_ready(res.x)
+    wall = time.time() - t0
+    err = float(np.abs(np.asarray(res.x, np.float64)
+                       - np.asarray(x_true, np.float64)).max())
+    return {
+        "iterations": int(res.iterations),
+        "converged": bool(res.converged),
+        "breakdown": bool(res.breakdown),
+        "rel_residual": float(res.rel_residual),
+        "max_err": err,
+        "wall_s": wall,
+    }
+
+
+def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import precision, stencil
+    from repro.core.solvers import SOLVERS
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices()
+    matrix_shape = (12, 12, 8) if smoke else (16, 16, 8)
+    headline_shape = (16, 16, 8) if smoke else (48, 48, 32)
+    hetero_shape = (12, 12, 8) if smoke else (16, 16, 12)
+    pol = precision.F32
+
+    # --- the matrix ------------------------------------------------------
+    cells = []
+    shapes = ("star7",) if smoke else MATRIX_SHAPES
+    for name in shapes:
+        spec = stencil.get_spec(name)
+        x_true = jax.random.normal(jax.random.PRNGKey(1), matrix_shape,
+                                   jnp.float32)
+        for solver in sorted(SOLVERS):
+            if solver == "cg":
+                cf = stencil.poisson(matrix_shape, spec=spec)
+            else:
+                cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0),
+                                                 matrix_shape, spec=spec)
+            b = stencil.rhs_for_solution(cf, x_true)
+            for backend in ("spmd", "pallas"):
+                for precond in ("none", "jacobi", "chebyshev"):
+                    cell = _solve_cell(
+                        mesh, cf, b, x_true, solver=solver, backend=backend,
+                        precond=precond, tol=1e-6, maxiter=400, policy=pol)
+                    cells.append({
+                        "stencil": name, "solver": solver,
+                        "backend": backend, "precond": precond,
+                        "problem": "poisson" if solver == "cg" else "random",
+                        "problem_shape": list(matrix_shape),
+                        **cell,
+                    })
+
+    # --- the acceptance headline ----------------------------------------
+    cf = stencil.poisson(headline_shape)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), headline_shape,
+                               jnp.float32)
+    b = stencil.rhs_for_solution(cf, x_true)
+    headline = {"problem": "poisson/star7",
+                "problem_shape": list(headline_shape), "cells": {}}
+    for precond in ("none", "jacobi", "chebyshev"):
+        headline["cells"][precond] = _solve_cell(
+            mesh, cf, b, x_true, solver="bicgstab", backend="spmd",
+            precond=precond, tol=1e-6, maxiter=800, policy=pol)
+    base = headline["cells"]["none"]["iterations"]
+    for precond in ("jacobi", "chebyshev"):
+        it = headline["cells"][precond]["iterations"]
+        headline["cells"][precond]["iter_reduction_vs_none"] = (
+            (base - it) / base if base else 0.0)
+
+    cf = stencil.heterogeneous_poisson(jax.random.PRNGKey(3), hetero_shape)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), hetero_shape, jnp.float32)
+    b = stencil.rhs_for_solution(cf, x_true)
+    hetero = {"problem": "heterogeneous (raw variable diagonal)",
+              "problem_shape": list(hetero_shape), "cells": {}}
+    for precond in ("none", "jacobi"):
+        hetero["cells"][precond] = _solve_cell(
+            mesh, cf, b, x_true, solver="bicgstab", backend="spmd",
+            precond=precond, tol=1e-7, maxiter=3000, policy=pol)
+    base = hetero["cells"]["none"]["iterations"]
+    it = hetero["cells"]["jacobi"]["iterations"]
+    hetero["cells"]["jacobi"]["iter_reduction_vs_none"] = (
+        (base - it) / base if base else 0.0)
+
+    record = {
+        "generated_by": "benchmarks/solver_matrix.py",
+        "smoke": smoke,
+        "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
+        "matrix": cells,
+        "precond_headline": headline,
+        "jacobi_headline": hetero,
+    }
+    if measure_hlo:
+        record["collectives"] = measure_collectives((8, 8, 8))
+        record["hlo_fabric_devices"] = _SUBPROC_DEVICES
+    return record
+
+
+def run(*, smoke: bool = False) -> list[str]:
+    record = sweep(smoke=smoke)
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "solver_matrix.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    rows = [f"solver_matrix,json_path,{path}"]
+    for c in record["matrix"]:
+        tag = f"{c['stencil']}_{c['solver']}_{c['backend']}_{c['precond']}"
+        assert c["converged"], f"matrix cell {tag} did not converge: {c}"
+        rows.append(f"solver_matrix,{tag}_iters,{c['iterations']}")
+    h = record["precond_headline"]["cells"]
+    rows.append(f"solver_matrix,headline_none_iters,{h['none']['iterations']}")
+    rows.append(f"solver_matrix,headline_cheb_iters,{h['chebyshev']['iterations']}")
+    red = h["chebyshev"]["iter_reduction_vs_none"]
+    rows.append(f"solver_matrix,headline_cheb_iter_reduction,{red:.3f}")
+    assert red >= 0.30, (
+        f"Chebyshev must cut BiCGStab iterations by >=30% on Poisson, got {red:.1%}")
+    j = record["jacobi_headline"]["cells"]
+    rows.append(f"solver_matrix,hetero_jacobi_iter_reduction,"
+                f"{j['jacobi']['iter_reduction_vs_none']:.3f}")
+    if "collectives" in record:
+        for backend, counts in record["collectives"].items():
+            n_ar = counts["allreduce_per_iter"]
+            assert n_ar == 3, (
+                f"{backend} backend must keep the 3-AllReduce fused "
+                f"schedule, lowered to {n_ar}")
+            rows.append(f"solver_matrix,{backend}_allreduce_per_iter,{n_ar}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny meshes (CI): same matrix, minutes not hours")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)

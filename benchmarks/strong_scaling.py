@@ -11,11 +11,9 @@ devices, fixed problem) exercising the real halo/AllReduce code path;
 AllReduce latency floor does not).
 """
 
-import json
 import os
 import subprocess
 import sys
-import time
 
 
 def _measure(n_devices: int, shape=(32, 32, 32), iters: int = 30) -> float:

@@ -11,6 +11,8 @@ older equivalent, never to a stub that silently does nothing.
 
 from __future__ import annotations
 
+import os
+
 import jax
 from jax.experimental import pallas as pl
 
@@ -60,6 +62,26 @@ def set_mesh(mesh):
     if hasattr(jax.sharding, "set_mesh"):
         return jax.sharding.set_mesh(mesh)
     return mesh
+
+
+def pallas_interpret_default() -> bool:
+    """Whether Pallas calls should run in interpret mode on this backend.
+
+    Interpret mode is required wherever there is no compiled Pallas target:
+    the kernels in this repo are written for the TPU (Mosaic) lowering, so
+    CPU (and GPU, where the Triton lowering would need different tiling)
+    fall back to the interpreter.  ``REPRO_PALLAS_INTERPRET=0/1`` overrides
+    the detection — the one switch for the whole kernel surface.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a per-call ``interpret=None`` default to the backend policy."""
+    return pallas_interpret_default() if interpret is None else bool(interpret)
 
 
 #: True when Pallas supports element-indexed BlockSpecs (``pl.Element``),

@@ -8,7 +8,6 @@ pattern (period), GQA ratio, MoE routing, and frontend stubs.
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCH_IDS = [

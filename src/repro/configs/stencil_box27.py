@@ -18,6 +18,11 @@ BOX27_CELLS = {
                                    policy="f32", problem="random"),
     "box_chip": StencilFamilyCell("box_chip", (96, 96, 256), "box27",
                                   problem="random"),
+    # full-neighborhood SPD smoother cell: CG through the Pallas-fused
+    # backend (the box27 corner-halo path feeding the fused kernels)
+    "box_cg_pallas": StencilFamilyCell("box_cg_pallas", (24, 24, 16), "box27",
+                                       policy="f32", problem="poisson",
+                                       solver="cg", backend="pallas"),
 }
 
 

@@ -19,13 +19,22 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class StencilFamilyCell:
-    """One named stencil-family workload (shape x stencil x precision)."""
+    """One named stencil-family workload.
+
+    A cell pins the full solve configuration: shape x stencil x precision
+    plus the solver-stack choices of the operator/solver/precond layers
+    (``launch.solve --solver/--backend/--precond``).
+    """
 
     name: str
     mesh_shape: tuple[int, int, int]     # problem mesh (X, Y, Z)
     stencil: str                         # key into repro.core.stencil.SPECS
     policy: str = "bf16_mixed"
     problem: str = "seismic"             # launch.solve --problem value
+    solver: str = "bicgstab"             # key into core.solvers.SOLVERS
+    backend: str = "spmd"                # key into core.operator.BACKENDS
+    precond: str = "none"                # core.precond.PRECONDS
+    cheb_degree: int = 3                 # when precond == "chebyshev"
 
 
 SEISMIC_CELLS = {
@@ -33,6 +42,11 @@ SEISMIC_CELLS = {
                                    policy="f32"),
     "rtm_chip": StencilFamilyCell("rtm_chip", (96, 96, 352), "star25"),
     "rtm_n1008": StencilFamilyCell("rtm_n1008", (1008, 1008, 352), "star25"),
+    # the preconditioned implicit-timestep variant: same operator, the
+    # Chebyshev right-precondition cuts the AllReduce-bearing outer
+    # iterations at the cost of local-only polynomial SpMVs
+    "rtm_chip_cheb": StencilFamilyCell("rtm_chip_cheb", (96, 96, 352),
+                                       "star25", precond="chebyshev"),
 }
 
 

@@ -1,9 +1,13 @@
 """The paper's primary contribution: distributed stencil BiCGStab.
 
 Layers: stencil operators (stencil.py), fabric halo exchange (halo.py),
-the solver loop with precision policies (bicgstab.py, precision.py), the
+the pluggable operator backends (operator.py), the solver registry
+(solvers/), right preconditioning (precond.py), precision policies
+(precision.py), the drivers gluing them together (bicgstab.py), the
 analytic performance model (perfmodel.py) and the SIMPLE CFD driver
 (simple_cfd.py).
 """
 
-from repro.core import bicgstab, halo, precision, stencil  # noqa: F401
+from repro.core import (  # noqa: F401
+    bicgstab, halo, operator, precision, precond, solvers, stencil,
+)

@@ -1,28 +1,24 @@
-"""Distributed BiCGStab (paper Alg. 1, §IV) and CG, with precision policies.
+"""Solver drivers: wire mesh + operator backend + preconditioner + solver.
 
-The solver is generic over two callables so the same loop runs in three
-modes that share every line of algorithm logic:
+This module is the glue layer (and the historical import surface — the
+algorithm bodies moved to ``core/solvers/``, the SpMV backends to
+``core/operator.py``, preconditioning to ``core/precond.py``):
 
-* reference: ``apply`` = dense-shift oracle, ``dots`` = local reductions;
-* SPMD:      ``apply`` = halo-exchange local apply, ``dots`` = psum over the
-  fabric — the whole loop lives inside one ``shard_map`` so the collective
-  schedule (this paper's subject) is exactly what we write;
-* kernel:    ``apply``/``axpy`` swapped for the Pallas fused kernels.
+* :func:`solve_ref`          — single-address-space solve (oracle);
+* :func:`solve_distributed`  — the paper's run: the whole Krylov iteration
+  inside one ``shard_map``, any registered solver x backend x precond;
+* :func:`make_iteration_fn`  — one SPMD iteration (the unit the paper
+  measures and the dry-run lowers);
+* :func:`solve_refined`      — bf16 inner solves + f32 iterative refinement;
+* :func:`solve_ref_fused`    — single-block BiCGStab through the fused
+  stencil7 dot-epilogue kernels (the per-chip reference schedule).
 
-Reduction schedule per iteration (paper counts 4 dot products):
-
-    s = A p;                <r0, s>                      (sync point 1)
-    y = A q;                <q, y>, <y, y>               (sync point 2)
-    r+ = q - w y;           <r0, r+>, <r+, r+>           (sync point 3)
-
-``fused_reductions=True`` (beyond-paper) batches each sync point into one
-AllReduce => 3/iter; ``False`` is the paper's one-blocking-AllReduce-per-dot
-=> 5/iter (incl. the convergence norm).
+Legacy names (``bicgstab_loop``, ``cg_loop``, ``SolveResult``, ...) are
+re-exported so existing callers and tests keep working.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Callable
 
@@ -31,136 +27,26 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.halo import FabricAxes, local_apply, make_dots
+from repro.core.halo import FabricAxes
+from repro.core.operator import BACKENDS, make_operator  # noqa: F401
 from repro.core.precision import Policy, F32, MIXED
-from repro.core.stencil import StencilCoeffs, apply_ref
-
-
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["x", "iterations", "rel_residual", "converged", "breakdown", "history"],
-    meta_fields=[],
+from repro.core.precond import PrecondConfig, build_precond, get_precond_config
+from repro.core.solvers import SOLVERS, get_solver  # noqa: F401
+from repro.core.solvers.bicgstab import bicgstab_fused_loop, bicgstab_loop  # noqa: F401
+from repro.core.solvers.cg import cg_loop  # noqa: F401
+from repro.core.solvers.common import (  # noqa: F401
+    EPS as _EPS,
+    SolveResult,
+    axpy_family as _axpys,
+    local_dots as _local_dots,
+    safe_div as _safe_div,
 )
-@dataclasses.dataclass
-class SolveResult:
-    x: jax.Array
-    iterations: jax.Array          # int32
-    rel_residual: jax.Array        # f32, recurrence residual at exit
-    converged: jax.Array           # bool
-    breakdown: jax.Array           # bool (rho or omega denominator vanished)
-    history: jax.Array | None = None  # f32[maxiter] rel residuals (history mode)
-
-
-_EPS = 1e-30
-
-
-def _safe_div(num, den):
-    ok = jnp.abs(den) > _EPS
-    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0), ~ok
-
-
-def _axpys(policy: Policy):
-    """AXPY family in compute precision (paper Table I: 6 HP AXPYs/iter)."""
-    c = policy.compute
-
-    def axpy(a, x, y):  # y + a*x
-        return (y.astype(c) + a.astype(c) * x.astype(c)).astype(policy.storage)
-
-    def axpy2(a, x, b, y, z):  # z + a*x + b*y
-        return (
-            z.astype(c) + a.astype(c) * x.astype(c) + b.astype(c) * y.astype(c)
-        ).astype(policy.storage)
-
-    return axpy, axpy2
-
-
-def bicgstab_loop(
-    apply_A: Callable[[jax.Array], jax.Array],
-    dots: Callable,
-    b: jax.Array,
-    x0: jax.Array | None,
-    *,
-    tol: float = 1e-6,
-    maxiter: int = 200,
-    policy: Policy = F32,
-    record_history: bool = False,
-    axpy=None,
-    axpy2=None,
-):
-    """The algorithm body; composable inside jit/shard_map. Returns SolveResult."""
-    default_axpy, default_axpy2 = _axpys(policy)
-    axpy = axpy or default_axpy
-    axpy2 = axpy2 or default_axpy2
-
-    b = b.astype(policy.storage)
-    if x0 is None:
-        x0 = jnp.zeros_like(b)
-        r0 = b
-    else:
-        x0 = x0.astype(policy.storage)
-        r0 = axpy(jnp.float32(-1.0), apply_A(x0), b)
-
-    (bnorm2,) = dots([(b, b)], policy)
-    (rho0,) = dots([(r0, r0)], policy)
-
-    def step(carry):
-        i, x, r, p, rho, res2, conv, brk = carry
-        s = apply_A(p)
-        (r0s,) = dots([(r0, s)], policy)
-        alpha, bad1 = _safe_div(rho, r0s)
-        q = axpy(-alpha, s, r)
-        y = apply_A(q)
-        qy, yy = dots([(q, y), (y, y)], policy)
-        omega, bad2 = _safe_div(qy, yy)
-        x = axpy2(alpha, p, omega, q, x)
-        r_new = axpy(-omega, y, q)
-        rho_new, res2_new = dots([(r0, r_new), (r_new, r_new)], policy)
-        beta_frac, bad3 = _safe_div(rho_new, rho)
-        alpha_frac, bad4 = _safe_div(alpha, omega)
-        beta = beta_frac * alpha_frac
-        p = axpy(beta, axpy(-omega, s, p), r_new)
-        conv = res2_new <= (tol * tol) * bnorm2
-        brk = bad1 | bad2 | bad3 | bad4
-        return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
-
-    init = (
-        jnp.int32(0), x0, r0, r0, rho0, rho0,
-        rho0 <= (tol * tol) * bnorm2, jnp.bool_(False),
-    )
-
-    if record_history:
-        def scan_body(carry, _):
-            i, x, r, p, rho, res2, conv, brk = carry
-            active = ~(conv | brk)
-            new = step(carry)
-            carry = jax.tree.map(
-                lambda n, o: jnp.where(active, n, o), new, carry
-            )
-            rel = jnp.sqrt(carry[5] / jnp.maximum(bnorm2, _EPS))
-            return carry, rel
-
-        final, hist = jax.lax.scan(scan_body, init, None, length=maxiter)
-        i, x, r, p, rho, res2, conv, brk = final
-        rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, _EPS))
-        return SolveResult(x, i, rel, conv, brk, history=hist)
-
-    def cond(carry):
-        i, *_rest, conv, brk = carry
-        return (i < maxiter) & ~conv & ~brk
-
-    final = jax.lax.while_loop(cond, step, init)
-    i, x, r, p, rho, res2, conv, brk = final
-    rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, _EPS))
-    return SolveResult(x, i, rel, conv, brk)
+from repro.core.stencil import StencilCoeffs, apply_ref
 
 
 # ---------------------------------------------------------------------------
 # Reference (single address space) entry point
 # ---------------------------------------------------------------------------
-
-def _local_dots(pairs, policy: Policy):
-    return jnp.stack([policy.dot(a, b) for a, b in pairs])
-
 
 def solve_ref(
     coeffs: StencilCoeffs,
@@ -171,14 +57,26 @@ def solve_ref(
     maxiter: int = 200,
     policy: Policy = F32,
     record_history: bool = False,
+    solver: str = "bicgstab",
+    backend: str = "reference",
+    precond: str | PrecondConfig | None = None,
 ) -> SolveResult:
-    """Single-device oracle solve (used by tests and small examples)."""
-    cf = coeffs.astype(policy.storage)
-    apply_A = functools.partial(apply_ref, cf, policy=policy)
-    return bicgstab_loop(
-        apply_A, _local_dots, b, x0,
-        tol=tol, maxiter=maxiter, policy=policy, record_history=record_history,
-    )
+    """Single-device oracle solve (used by tests and small examples).
+
+    ``backend="pallas"`` runs the same solve through the fused kernels on a
+    1x1 fabric (all collectives degenerate) — the single-block fused path.
+    """
+    op = make_operator(backend, coeffs, policy=policy)
+    M = build_precond(get_precond_config(precond), op)
+    return get_solver(solver)(
+        op, b, x0, tol=tol, maxiter=maxiter, policy=policy,
+        record_history=record_history, precond=M)
+
+
+def cg_ref(coeffs: StencilCoeffs, b, **kw):
+    """CG oracle (kept for the historical call sites)."""
+    return solve_ref(coeffs, b, solver="cg",
+                     **{k: v for k, v in kw.items() if k != "x0"})
 
 
 def solve_ref_fused(
@@ -187,19 +85,21 @@ def solve_ref_fused(
     *,
     tol: float = 1e-6,
     maxiter: int = 200,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """BiCGStab evaluated entirely through the fused Pallas schedule
     (EXPERIMENTS §Perf stencil v3): SpMV+dot epilogues and fused
     update+dot passes — 31 words/meshpoint/iteration instead of 42.
 
     Single-block (per-chip) reference; the distributed solver composes the
-    same kernels via ``apply_impl=pallas_local_apply``.  Python loop (not
+    same vector kernels via ``backend="pallas"``.  Python loop (not
     lax.while) because pallas_call is re-traced per call in interpret mode.
     """
+    from repro.compat import resolve_interpret
     from repro.kernels.fused_iter import update_p, update_xr_dots
     from repro.kernels.stencil7.fused import stencil7_dot, stencil7_two_dots
 
+    interpret = resolve_interpret(interpret)
     x = jnp.zeros_like(b)
     r = b
     p = b
@@ -242,29 +142,50 @@ def solve_distributed(
     fused_reductions: bool = True,
     overlap_halo: bool = True,
     record_history: bool = False,
+    solver: str = "bicgstab",
+    backend: str = "spmd",
+    precond: str | PrecondConfig | None = None,
+    interpret: bool | None = None,
     apply_impl: Callable | None = None,
 ) -> SolveResult:
-    """BiCGStab with the entire iteration inside one ``shard_map``.
+    """A Krylov solve with the entire iteration inside one ``shard_map``.
 
     The fabric sees exactly the paper's traffic: one bidirectional face
-    exchange per mesh axis per SpMV (2 SpMV/iter) and 3 (fused) or 5
-    (paper-faithful separate) scalar AllReduces per iteration.
+    exchange per mesh axis per SpMV and 3 (fused) or 5 (paper-faithful
+    separate) scalar AllReduces per BiCGStab iteration — with
+    ``backend="pallas"`` the local work additionally runs as the fused
+    stencil + vector-update Pallas kernels.
 
-    ``apply_impl`` lets callers swap the local SpMV for a Pallas kernel.
+    ``precond`` ("none" | "jacobi" | "chebyshev" | a PrecondConfig) applies
+    on the right, so the collective schedule is unchanged.  ``apply_impl``
+    is the legacy hook swapping the local SpMV for a custom kernel.
     """
     fabric = FabricAxes.from_mesh(mesh)
+    if backend == "reference" and mesh.devices.size > 1:
+        # the reference backend has no halo exchange and local-only dots:
+        # inside shard_map each shard would silently solve an unrelated
+        # zero-Dirichlet sub-problem
+        raise ValueError(
+            "backend='reference' is single-address-space only; use "
+            "backend='spmd' or 'pallas' on a multi-device mesh "
+            "(or solve_ref on the undistributed arrays)")
     spec = fabric.spec(b.ndim)
-    dots = make_dots(fabric, fused=fused_reductions)
     cf = coeffs.astype(policy.storage)
-
-    impl = apply_impl or local_apply
+    pconf = get_precond_config(precond)
+    solver_fn = get_solver(solver)
 
     def solve_fn(cf_local, b_local, x0_local):
-        apply_A = lambda v: impl(cf_local, v, fabric, policy=policy, overlap=overlap_halo)
-        return bicgstab_loop(
-            apply_A, dots, b_local, x0_local,
-            tol=tol, maxiter=maxiter, policy=policy, record_history=record_history,
-        )
+        op = make_operator(
+            backend, cf_local, fabric, policy=policy,
+            overlap=overlap_halo, fused_reductions=fused_reductions,
+            interpret=interpret)
+        if apply_impl is not None:
+            op = op.with_apply(lambda v: apply_impl(
+                op.coeffs, v, fabric, policy=policy, overlap=overlap_halo))
+        M = build_precond(pconf, op)
+        return solver_fn(op, b_local, x0_local, tol=tol, maxiter=maxiter,
+                         policy=policy, record_history=record_history,
+                         precond=M)
 
     scalar = P()
     out_specs = SolveResult(
@@ -278,7 +199,7 @@ def solve_distributed(
         solve_fn, mesh=mesh,
         in_specs=(spec, spec, spec),
         out_specs=out_specs,
-        # Pallas apply_impls produce ShapeDtypeStructs without vma metadata;
+        # Pallas applies produce ShapeDtypeStructs without vma metadata;
         # out_specs above are explicit, so the vma checker adds nothing here.
         check_vma=False,
     )
@@ -291,35 +212,66 @@ def make_iteration_fn(
     policy: Policy = MIXED,
     fused_reductions: bool = True,
     overlap_halo: bool = True,
+    backend: str = "spmd",
+    interpret: bool | None = None,
     apply_impl: Callable | None = None,
 ):
     """One BiCGStab iteration as a standalone SPMD function.
 
     This is the unit the paper measures (28.1 us/iter on the CS-1) and the
     unit the dry-run lowers for the roofline: 2 halo-exchange SpMVs, 6 AXPYs,
-    4 inner products, 3 (fused) or 5 (separate) AllReduce points.
+    4 inner products, 3 (fused) or 5 (separate) AllReduce points.  With
+    ``backend="pallas"`` the body is the fused-kernel dataflow, so lowering
+    it shows the 3-AllReduce schedule of the wired fused iteration.
 
     Signature: (coeffs, x, r, p, r0, rho) -> (x, r, p, rho, res2).
     """
+    from repro.core.solvers.common import safe_div
+
     fabric = FabricAxes.from_mesh(mesh)
-    dots = make_dots(fabric, fused=fused_reductions)
-    impl = apply_impl or local_apply
-    axpy, axpy2 = _axpys(policy)
+    if backend == "reference" and mesh.devices.size > 1:
+        raise ValueError(
+            "backend='reference' is single-address-space only; use "
+            "backend='spmd' or 'pallas' on a multi-device mesh")
 
     def iteration(cf, x, r, p, r0, rho):
-        apply_A = lambda v: impl(cf, v, fabric, policy=policy, overlap=overlap_halo)
-        s = apply_A(p)
-        (r0s,) = dots([(r0, s)], policy)
-        alpha, _ = _safe_div(rho, r0s)
+        op = make_operator(
+            backend, cf, fabric, policy=policy,
+            overlap=overlap_halo, fused_reductions=fused_reductions,
+            interpret=interpret)
+        if apply_impl is not None:
+            op = op.with_apply(lambda v: apply_impl(
+                op.coeffs, v, fabric, policy=policy, overlap=overlap_halo))
+        axpy, axpy2 = _axpys(policy)
+        if op.fused is not None:
+            f = op.fused
+            st = policy.storage
+            s = op.apply(p)
+            (r0s,) = op.reduce_partials([f.dot_partial(r0, s)])
+            alpha, _ = safe_div(rho, r0s)
+            q_in = r - alpha.astype(st) * s
+            y = op.apply(q_in)
+            q, qy, yy = f.update_q_dots(alpha, r, s, y)
+            qy, yy = op.reduce_partials([qy, yy])
+            omega, _ = safe_div(qy, yy)
+            x, r_new, r0r, rr = f.update_xr_dots(alpha, omega, x, p, q, y, r0)
+            rho_new, res2 = op.reduce_partials([r0r, rr])
+            beta_frac, _ = safe_div(rho_new, rho)
+            alpha_frac, _ = safe_div(alpha, omega)
+            p = f.update_p(beta_frac * alpha_frac, omega, r_new, p, s)
+            return x, r_new, p, rho_new, res2
+        s = op.apply(p)
+        (r0s,) = op.dots([(r0, s)], policy)
+        alpha, _ = safe_div(rho, r0s)
         q = axpy(-alpha, s, r)
-        y = apply_A(q)
-        qy, yy = dots([(q, y), (y, y)], policy)
-        omega, _ = _safe_div(qy, yy)
+        y = op.apply(q)
+        qy, yy = op.dots([(q, y), (y, y)], policy)
+        omega, _ = safe_div(qy, yy)
         x = axpy2(alpha, p, omega, q, x)
         r_new = axpy(-omega, y, q)
-        rho_new, res2 = dots([(r0, r_new), (r_new, r_new)], policy)
-        beta_frac, _ = _safe_div(rho_new, rho)
-        alpha_frac, _ = _safe_div(alpha, omega)
+        rho_new, res2 = op.dots([(r0, r_new), (r_new, r_new)], policy)
+        beta_frac, _ = safe_div(rho_new, rho)
+        alpha_frac, _ = safe_div(alpha, omega)
         p = axpy(beta_frac * alpha_frac, axpy(-omega, s, p), r_new)
         return x, r_new, p, rho_new, res2
 
@@ -329,7 +281,7 @@ def make_iteration_fn(
         iteration, mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec, scalar),
         out_specs=(spec, spec, spec, scalar, scalar),
-        check_vma=False,   # see solve_distributed: Pallas apply_impls
+        check_vma=False,   # see solve_distributed: Pallas applies
     )
 
 
@@ -381,45 +333,3 @@ def solve_refined(
     r = b.astype(jnp.float32) - apply32(x)
     rels.append(jnp.linalg.norm(r) / jnp.maximum(bnorm, _EPS))
     return x, jnp.stack(rels)
-
-
-# ---------------------------------------------------------------------------
-# CG (for the symmetric/HPCG-flavored comparisons)
-# ---------------------------------------------------------------------------
-
-def cg_loop(apply_A, dots, b, x0=None, *, tol=1e-6, maxiter=200, policy=F32):
-    axpy, _ = _axpys(policy)
-    b = b.astype(policy.storage)
-    x = jnp.zeros_like(b) if x0 is None else x0.astype(policy.storage)
-    r = b if x0 is None else axpy(jnp.float32(-1.0), apply_A(x), b)
-    (bnorm2,) = dots([(b, b)], policy)
-    (rho,) = dots([(r, r)], policy)
-
-    def cond(c):
-        i, x, r, p, rho, conv = c
-        return (i < maxiter) & ~conv
-
-    def step(c):
-        i, x, r, p, rho, conv = c
-        ap = apply_A(p)
-        (pap,) = dots([(p, ap)], policy)
-        alpha, _ = _safe_div(rho, pap)
-        x = axpy(alpha, p, x)
-        r = axpy(-alpha, ap, r)
-        (rho_new,) = dots([(r, r)], policy)
-        beta, _ = _safe_div(rho_new, rho)
-        p = axpy(beta, p, r)
-        return i + 1, x, r, p, rho_new, rho_new <= (tol * tol) * bnorm2
-
-    i, x, r, p, rho, conv = jax.lax.while_loop(
-        cond, step, (jnp.int32(0), x, r, r, rho, rho <= (tol * tol) * bnorm2)
-    )
-    rel = jnp.sqrt(rho / jnp.maximum(bnorm2, _EPS))
-    return SolveResult(x, i, rel, conv, jnp.bool_(False))
-
-
-def cg_ref(coeffs: StencilCoeffs, b, **kw):
-    policy = kw.get("policy", F32)
-    cf = coeffs.astype(policy.storage)
-    return cg_loop(functools.partial(apply_ref, cf, policy=policy), _local_dots, b,
-                   **{k: v for k, v in kw.items() if k != "x0"})

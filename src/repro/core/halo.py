@@ -33,7 +33,6 @@ All functions here are *local* (rank-per-shard) and must run inside
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -180,7 +179,11 @@ def padded_apply(
     c = policy.compute
     reg = region if region is not None else tuple(slice(None) for _ in shape)
     sub = lambda off: _window(vp, off, shape, spec.radius)[reg].astype(c)
-    u = sub((0,) * len(shape))  # unit main diagonal (Jacobi preconditioning)
+    center = sub((0,) * len(shape))
+    if coeffs.diag is None:  # unit main diagonal (Jacobi-normalized family)
+        u = center
+    else:
+        u = coeffs.diag[reg].astype(c) * center
     for name, cf in coeffs.diags.items():
         u = u + cf[reg].astype(c) * sub(name_offset(name, len(shape)))
     return u
@@ -218,7 +221,7 @@ def local_apply(
 
     # interior: zero-Dirichlet local apply, no collective dependency
     vc = v.astype(c)
-    u = vc
+    u = vc if coeffs.diag is None else coeffs.diag.astype(c) * vc
     for name, cf in coeffs.diags.items():
         u = u + cf.astype(c) * _shift_nd(vc, name_offset(name, v.ndim))
     # shell: overwrite the depth-r slabs that needed halo values (slabs of
@@ -233,31 +236,9 @@ def local_apply(
     return u.astype(policy.storage)
 
 
-# ---------------------------------------------------------------------------
-# Reductions (paper §IV-3: AllReduce for the BiCGStab inner products)
-# ---------------------------------------------------------------------------
-
-def fused_dots(pairs, axis_names, policy: Policy) -> jax.Array:
-    """k inner products in ONE AllReduce (beyond-paper batching).
-
-    Local FMAC-style partials (bf16 products, f32 accumulation — paper
-    Table I's mixed column) are stacked into a length-k f32 vector and
-    reduced with a single ``psum``, replacing k blocking AllReduces with one.
-    """
-    partials = jnp.stack([policy.dot(a, b) for a, b in pairs])
-    return jax.lax.psum(partials, axis_names)
-
-
-def separate_dots(pairs, axis_names, policy: Policy) -> jax.Array:
-    """Paper-faithful: one blocking AllReduce per inner product."""
-    return jnp.stack([jax.lax.psum(policy.dot(a, b), axis_names) for a, b in pairs])
-
-
-def make_dots(fabric: FabricAxes, *, fused: bool = True):
-    """Reduction callable ``dots(pairs, policy) -> f32[k]`` over the fabric."""
-    names = tuple(a for a in (fabric.x, fabric.y, fabric.z) if a is not None)
-    fn = fused_dots if fused else separate_dots
-    return lambda pairs, policy: fn(pairs, names, policy)
+# Reductions (paper §IV-3: AllReduce for the BiCGStab inner products) live
+# with the operator backends — ``core.operator._make_reductions`` builds the
+# fused (one psum per sync point) / separate (one psum per dot) schedules.
 
 
 def global_apply(mesh, coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32,

@@ -1,0 +1,228 @@
+"""The LinearOperator layer: one protocol, three interchangeable backends.
+
+A :class:`LinearOperator` bundles everything a Krylov solver needs from the
+matrix side —
+
+* ``apply(v)``            : u = A v (the SpMV, local to this shard);
+* ``dots(pairs, policy)`` : fully-reduced inner products (the operator owns
+  the reduction schedule: local stack / fused psum / separate psums);
+* ``reduce_partials(ps)`` : AllReduce of *precomputed* f32 local partials
+  (the fused-kernel path computes partials inside Pallas epilogues and only
+  needs the reduction);
+* ``reduce_max(x)``       : fabric-wide max (spectral-bound setup);
+* ``fused``               : optional :class:`FusedOps` — the Pallas fused
+  update+dot passes that let BiCGStab run one iteration as fused kernels
+  plus exactly 3 AllReduces.
+
+Backends (:data:`BACKENDS`):
+
+* ``reference`` — dense-shift oracle in a single address space (tests,
+  small examples, the truth everything else is checked against);
+* ``spmd``      — depth-r halo-exchange ``local_apply`` + psum reductions;
+  must run inside ``shard_map`` (construct it in the mapped function over
+  the *local* coefficient shard);
+* ``pallas``    — the halo exchange feeding the fused stencil kernel
+  (``kernels/stencil_nd``) plus the ``kernels/fused_iter`` vector passes,
+  wired into the same shard_map loop.
+
+Operators are built *inside* the shard_map body (they close over local
+shards); drivers in ``core/bicgstab.py`` do that wiring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.halo import FabricAxes, local_apply
+from repro.core.precision import Policy, F32
+from repro.core.solvers.common import local_dots
+from repro.core.stencil import StencilCoeffs, apply_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedOps:
+    """The fused Pallas iteration passes (see ``kernels/fused_iter``).
+
+    Each callable returns its vector output(s) plus f32 *local* partial dot
+    products; the solver batches the partials of one sync point into a
+    single ``reduce_partials`` AllReduce.
+    """
+
+    dot_partial: Callable      # (a, b) -> f32 partial <a, b>
+    update_q_dots: Callable    # (alpha, r, s, y) -> (q, <q,y>, <y,y>)
+    update_xr_dots: Callable   # (alpha, omega, x, p, q, y, r0) -> (x, r, <r0,r>, <r,r>)
+    update_p: Callable         # (beta, omega, r, p, s) -> p
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearOperator:
+    """A shard-local view of ``A`` plus its reduction schedule."""
+
+    name: str
+    coeffs: StencilCoeffs
+    policy: Policy
+    apply: Callable
+    dots: Callable
+    reduce_partials: Callable
+    reduce_max: Callable
+    fused: FusedOps | None = None
+
+    @property
+    def spec(self):
+        return self.coeffs.spec
+
+    def with_apply(self, apply: Callable) -> "LinearOperator":
+        """A copy with the SpMV swapped (how right preconditioning wraps)."""
+        return dataclasses.replace(self, apply=apply)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+def _identity_reduce(partials):
+    return jnp.stack([jnp.asarray(p, jnp.float32) for p in partials])
+
+
+def _fabric_axis_names(fabric: FabricAxes) -> tuple[str, ...]:
+    """Mesh axes that actually carry >1 shard.  Extent-1 axes reduce to the
+    identity, and skipping them lets the distributed backends also run
+    outside shard_map on a degenerate 1x1 fabric (single-block fused path).
+    """
+    pairs = ((fabric.x, fabric.nx), (fabric.y, fabric.ny), (fabric.z, fabric.nz))
+    return tuple(a for a, n in pairs if a is not None and n > 1)
+
+
+def _make_reductions(names: tuple[str, ...], fused_reductions: bool):
+    """(dots, reduce_partials, reduce_max) over the named fabric axes."""
+    def psum(x):
+        return jax.lax.psum(x, names) if names else x
+
+    if fused_reductions:
+        def reduce_partials(ps):
+            return psum(_identity_reduce(ps))
+    else:
+        def reduce_partials(ps):
+            return jnp.stack([psum(jnp.asarray(p, jnp.float32)) for p in ps])
+
+    def dots(pairs, policy):
+        # local FMAC-style partials (see Policy.dot), then one psum per
+        # sync point (fused) or per dot (paper-faithful separate)
+        return reduce_partials([policy.dot(a, b) for a, b in pairs])
+
+    def reduce_max(x):
+        return jax.lax.pmax(x, names) if names else x
+
+    return dots, reduce_partials, reduce_max
+
+
+def reference_operator(coeffs: StencilCoeffs, *, policy: Policy = F32,
+                       **_unused) -> LinearOperator:
+    """Single-address-space oracle: dense-shift apply, local reductions."""
+    cf = coeffs.astype(policy.storage)
+    return LinearOperator(
+        name="reference", coeffs=cf, policy=policy,
+        apply=lambda v: apply_ref(cf, v, policy=policy),
+        dots=local_dots,
+        reduce_partials=_identity_reduce,
+        reduce_max=lambda x: x,
+    )
+
+
+def spmd_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
+                  policy: Policy = F32, overlap: bool = True,
+                  fused_reductions: bool = True, **_unused) -> LinearOperator:
+    """Halo-overlap SPMD backend (the paper's scheme; runs inside shard_map)."""
+    fabric = fabric or FabricAxes()
+    cf = coeffs.astype(policy.storage)
+    dots, reduce_partials, reduce_max = _make_reductions(
+        _fabric_axis_names(fabric), fused_reductions)
+    return LinearOperator(
+        name="spmd", coeffs=cf, policy=policy,
+        apply=lambda v: local_apply(cf, v, fabric, policy=policy, overlap=overlap),
+        dots=dots,
+        reduce_partials=reduce_partials,
+        reduce_max=reduce_max,
+    )
+
+
+def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
+                    policy: Policy = F32, fused_reductions: bool = True,
+                    interpret: bool | None = None, **_unused) -> LinearOperator:
+    """Pallas-fused backend: halo exchange + fused stencil kernel for the
+    SpMV, ``kernels/fused_iter`` passes for the vector updates and dot
+    partials.  Runs inside shard_map; one BiCGStab iteration lowers to
+    fused kernels + 3 AllReduces end to end.
+    """
+    from repro.compat import resolve_interpret
+    from repro.kernels.fused_iter import (
+        dot_mixed, update_p, update_q_dots, update_xr_dots,
+    )
+    from repro.kernels.stencil_nd.ops import pallas_local_apply
+
+    fabric = fabric or FabricAxes()
+    cf = coeffs.astype(policy.storage)
+    it = resolve_interpret(interpret)
+    _dots, reduce_partials, reduce_max = _make_reductions(
+        _fabric_axis_names(fabric), fused_reductions)
+
+    cf_unit = StencilCoeffs(cf.diags)  # the kernel's unit-diagonal contract
+    base_apply = lambda v: pallas_local_apply(cf_unit, v, fabric, policy=policy,
+                                              interpret=it)
+    if cf.diag is None:
+        apply = base_apply
+    else:
+        # The stencil kernel assumes the family's unit main diagonal; a raw
+        # (non-normalized) operator adds its (d - 1) deviation elementwise.
+        c = policy.compute
+        dcorr = (cf.diag.astype(c) - jnp.asarray(1, c))
+
+        def apply(v):
+            return (base_apply(v).astype(c) + dcorr * v.astype(c)).astype(policy.storage)
+
+    dot_partial = lambda a, b: dot_mixed(a, b, interpret=it)
+
+    return LinearOperator(
+        name="pallas", coeffs=cf, policy=policy,
+        apply=apply,
+        dots=lambda pairs, policy: reduce_partials(
+            [dot_partial(a, b) for a, b in pairs]),
+        reduce_partials=reduce_partials,
+        reduce_max=reduce_max,
+        fused=FusedOps(
+            dot_partial=dot_partial,
+            update_q_dots=lambda alpha, r, s, y: update_q_dots(
+                alpha, r, s, y, interpret=it),
+            update_xr_dots=lambda alpha, omega, x, p, q, y, r0: update_xr_dots(
+                alpha, omega, x, p, q, y, r0, interpret=it),
+            update_p=lambda beta, omega, r, p, s: update_p(
+                beta, omega, r, p, s, interpret=it),
+        ),
+    )
+
+
+#: backend name -> constructor; launch/solve.py and benchmarks key off this.
+BACKENDS = {
+    "reference": reference_operator,
+    "spmd": spmd_operator,
+    "pallas": pallas_operator,
+}
+
+
+def make_operator(backend: str, coeffs: StencilCoeffs,
+                  fabric: FabricAxes | None = None, *, policy: Policy = F32,
+                  **kwargs) -> LinearOperator:
+    """Build a backend by name.  ``fabric`` is required semantics for the
+    distributed backends (pass the shard_map-local view); the reference
+    backend ignores it."""
+    try:
+        ctor = BACKENDS[backend]
+    except KeyError:
+        raise KeyError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}") from None
+    if backend == "reference":
+        return ctor(coeffs, policy=policy, **kwargs)
+    return ctor(coeffs, fabric, policy=policy, **kwargs)

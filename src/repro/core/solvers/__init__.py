@@ -1,0 +1,39 @@
+"""Solver registry: Krylov loops generic over a :class:`~repro.core.operator
+.LinearOperator`.
+
+Every solver is a function ``(operator, b, x0, *, tol, maxiter, policy,
+record_history, precond) -> SolveResult``.  The operator supplies the SpMV
+and the reduction schedule (reference / SPMD / Pallas-fused backends — see
+``core/operator.py``); the solver supplies the recurrence.  Preconditioning
+is applied on the *right* (``A M^-1 y = b, x = M^-1 y``), so the residual,
+the convergence test and the per-iteration collective schedule are exactly
+those of the unpreconditioned loop.
+
+Adding a solver: write ``my_loop(operator, b, x0, **kw)`` in a new module
+using the helpers in ``solvers/common.py``, and register it in
+:data:`SOLVERS`.  See docs/architecture.md ("adding a solver/backend").
+"""
+
+from __future__ import annotations
+
+from repro.core.solvers.bicgstab import bicgstab_solver
+from repro.core.solvers.cg import cg_solver
+from repro.core.solvers.common import SolveResult, axpy_family, local_dots, safe_div
+
+SOLVERS = {
+    "bicgstab": bicgstab_solver,
+    "cg": cg_solver,
+}
+
+
+def get_solver(name: str):
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise KeyError(f"unknown solver {name!r}; have {sorted(SOLVERS)}") from None
+
+
+__all__ = [
+    "SOLVERS", "get_solver", "SolveResult", "safe_div", "axpy_family",
+    "local_dots", "bicgstab_solver", "cg_solver",
+]

@@ -1,0 +1,92 @@
+"""Conjugate gradients (the symmetric/HPCG-flavored comparison solver),
+generic over a LinearOperator and with full SolveResult parity.
+
+Per-iteration reduction schedule (2 sync points vs BiCGStab's 3):
+
+    ap = A p;        <p, ap>              (sync point 1)
+    r+ = r - a*ap;   <r+, r+>  (norm)     (sync point 2)
+
+Breakdown is flagged when <p, Ap> vanishes (loss of positive-definiteness
+— e.g. CG applied to a nonsymmetric stencil) or the rho recurrence
+degenerates, mirroring the BiCGStab flags so drivers and tests treat both
+solvers uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.precision import Policy, F32
+from repro.core.solvers.common import (
+    SolveResult, axpy_family, finish, run_krylov, safe_div,
+)
+
+
+def cg_loop(
+    apply_A: Callable,
+    dots: Callable,
+    b,
+    x0=None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    policy: Policy = F32,
+    record_history: bool = False,
+) -> SolveResult:
+    """The algorithm body; composable inside jit/shard_map. Returns SolveResult."""
+    axpy, _ = axpy_family(policy)
+    b = b.astype(policy.storage)
+    if x0 is None:
+        x = jnp.zeros_like(b)
+        r = b
+    else:
+        x = x0.astype(policy.storage)
+        r = axpy(jnp.float32(-1.0), apply_A(x), b)
+    (bnorm2,) = dots([(b, b)], policy)
+    (rho0,) = dots([(r, r)], policy)
+
+    def step(carry):
+        i, x, r, p, rho, conv, brk = carry
+        ap = apply_A(p)
+        (pap,) = dots([(p, ap)], policy)
+        alpha, bad1 = safe_div(rho, pap)
+        x = axpy(alpha, p, x)
+        r = axpy(-alpha, ap, r)
+        (rho_new,) = dots([(r, r)], policy)
+        beta, bad2 = safe_div(rho_new, rho)
+        p = axpy(beta, p, r)
+        conv = rho_new <= (tol * tol) * bnorm2
+        return i + 1, x, r, p, rho_new, conv, brk | bad1 | bad2
+
+    init = (jnp.int32(0), x, r, r, rho0,
+            rho0 <= (tol * tol) * bnorm2, jnp.bool_(False))
+    final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
+                             record_history=record_history)
+    return finish(final, bnorm2, history=hist)
+
+
+def cg_solver(
+    op,
+    b,
+    x0=None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    policy: Policy = F32,
+    record_history: bool = False,
+    precond=None,
+) -> SolveResult:
+    """Registry entry point: CG over a LinearOperator (right-preconditioned).
+
+    Note CG's convergence theory wants A SPD and M^-1 symmetric in the A
+    inner product; the Chebyshev preconditioner (a polynomial in A) commutes
+    with A and preserves this, Jacobi only when the diagonal is constant.
+    """
+    from repro.core.precond import wrap_right
+
+    wrapped, unwrap = wrap_right(op, precond)
+    res = cg_loop(wrapped.apply, wrapped.dots, b, x0, tol=tol, maxiter=maxiter,
+                  policy=policy, record_history=record_history)
+    return unwrap(res)

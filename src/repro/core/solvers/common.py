@@ -1,0 +1,100 @@
+"""Shared solver plumbing: SolveResult, safe division, the AXPY family, and
+the while-loop / history-scan scaffolding every Krylov loop reuses.
+
+Everything here composes inside jit and ``shard_map`` — carries are pytrees
+of arrays, control flow is ``lax.while_loop`` (or ``lax.scan`` when a
+residual history is recorded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Policy
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["x", "iterations", "rel_residual", "converged", "breakdown", "history"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class SolveResult:
+    """Uniform solver output (BiCGStab and CG alike — drivers and tests
+    treat every registered solver identically)."""
+
+    x: jax.Array
+    iterations: jax.Array          # int32
+    rel_residual: jax.Array        # f32, recurrence residual at exit
+    converged: jax.Array           # bool
+    breakdown: jax.Array           # bool (a recurrence denominator vanished)
+    history: jax.Array | None = None  # f32[maxiter] rel residuals (history mode)
+
+
+EPS = 1e-30
+
+
+def safe_div(num, den):
+    """num/den plus a breakdown flag when the denominator vanished."""
+    ok = jnp.abs(den) > EPS
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0), ~ok
+
+
+def axpy_family(policy: Policy):
+    """AXPY family in compute precision (paper Table I: 6 HP AXPYs/iter)."""
+    c = policy.compute
+
+    def axpy(a, x, y):  # y + a*x
+        return (y.astype(c) + a.astype(c) * x.astype(c)).astype(policy.storage)
+
+    def axpy2(a, x, b, y, z):  # z + a*x + b*y
+        return (
+            z.astype(c) + a.astype(c) * x.astype(c) + b.astype(c) * y.astype(c)
+        ).astype(policy.storage)
+
+    return axpy, axpy2
+
+
+def local_dots(pairs, policy: Policy):
+    """Single-address-space reduction: stack of FMAC-style inner products."""
+    return jnp.stack([policy.dot(a, b) for a, b in pairs])
+
+
+def run_krylov(step, init, *, maxiter: int, bnorm2, record_history: bool):
+    """Drive a Krylov ``step`` to convergence.
+
+    ``step(carry) -> carry`` advances one iteration; the carry contract is
+    ``(i, x, *state, res2, conv, brk)`` — position 0 the iteration counter,
+    the last three the squared residual, convergence and breakdown flags.
+
+    Returns the final carry plus (optionally) the f32[maxiter] relative
+    residual history: ``record_history=True`` switches the ``while_loop``
+    for a fixed-length ``scan`` whose inactive iterations freeze the carry.
+    """
+    if record_history:
+        def scan_body(carry, _):
+            active = ~(carry[-2] | carry[-1])
+            new = step(carry)
+            carry = jax.tree.map(lambda n, o: jnp.where(active, n, o), new, carry)
+            rel = jnp.sqrt(carry[-3] / jnp.maximum(bnorm2, EPS))
+            return carry, rel
+
+        final, hist = jax.lax.scan(scan_body, init, None, length=maxiter)
+        return final, hist
+
+    def cond(carry):
+        i, *_rest, conv, brk = carry
+        return (i < maxiter) & ~conv & ~brk
+
+    return jax.lax.while_loop(cond, step, init), None
+
+
+def finish(carry, bnorm2, history=None) -> SolveResult:
+    """Assemble a SolveResult from a run_krylov final carry."""
+    i, x, *_rest, res2, conv, brk = carry
+    rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, EPS))
+    return SolveResult(x, i, rel, conv, brk, history=history)

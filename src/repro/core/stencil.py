@@ -185,13 +185,20 @@ def spec_of(names, ndim: int = 3) -> StencilSpec:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class StencilCoeffs:
-    """Off-diagonal coefficient fields of a unit-diagonal stencil matrix.
+    """Off-diagonal coefficient fields of a stencil matrix.
 
     ``diags[name]`` has the mesh shape; entry ``diags['xp'][i,j,k]`` multiplies
     ``v[i+1,j,k]`` when computing row ``(i,j,k)`` of ``A @ v``.
+
+    ``diag`` is the main diagonal: ``None`` means the family's canonical
+    *unit* diagonal (the paper's Jacobi-normalized form — "we only store six
+    other diagonals"); a stored array makes this a *raw* operator whose
+    diagonal varies per row (e.g. :func:`heterogeneous_poisson`), the case
+    where Jacobi preconditioning does real work.
     """
 
     diags: dict[str, jax.Array]
+    diag: jax.Array | None = None
 
     @property
     def names(self) -> tuple[str, ...]:
@@ -219,14 +226,39 @@ class StencilCoeffs:
         return {n: name_offset(n, self.ndim) for n in self.diags}
 
     def astype(self, dtype) -> "StencilCoeffs":
-        return StencilCoeffs({k: v.astype(dtype) for k, v in self.diags.items()})
+        return StencilCoeffs(
+            {k: v.astype(dtype) for k, v in self.diags.items()},
+            diag=None if self.diag is None else self.diag.astype(dtype))
+
+    def normalized(self) -> tuple["StencilCoeffs", jax.Array | None]:
+        """Left-Jacobi row scaling: ``(unit-diagonal coeffs, diag)``.
+
+        ``D^-1 A`` has unit diagonal and off-diagonals ``cf/diag`` — exactly
+        the paper's pre-normalization.  Returns ``(self, None)`` when
+        already normalized.
+        """
+        if self.diag is None:
+            return self, None
+        d = self.diag
+        return StencilCoeffs({k: v / d.astype(v.dtype)
+                              for k, v in self.diags.items()}), d
 
     def tree_flatten(self):
         keys = tuple(sorted(self.diags))
-        return tuple(self.diags[k] for k in keys), keys
+        children = tuple(self.diags[k] for k in keys)
+        if self.diag is not None:
+            return children + (self.diag,), (keys, True)
+        return children, (keys, False)
 
     @classmethod
-    def tree_unflatten(cls, keys, values):
+    def tree_unflatten(cls, aux, values):
+        # pre-diag pickles/callers may pass bare key tuples
+        if len(aux) == 2 and isinstance(aux[1], bool):
+            keys, has_diag = aux
+        else:
+            keys, has_diag = aux, False
+        if has_diag:
+            return cls(dict(zip(keys, values[:-1])), diag=values[-1])
         return cls(dict(zip(keys, values)))
 
 
@@ -264,7 +296,10 @@ def apply_ref(coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32) -> j
     policy); the unit diagonal contributes ``v`` directly.
     """
     c = policy.compute
-    u = v.astype(c)
+    if coeffs.diag is None:
+        u = v.astype(c)
+    else:
+        u = coeffs.diag.astype(c) * v.astype(c)
     for name, cf in coeffs.diags.items():
         off = name_offset(name, v.ndim)
         u = u + cf.astype(c) * _shift_nd(v, off).astype(c)
@@ -275,7 +310,10 @@ def to_dense(coeffs: StencilCoeffs) -> np.ndarray:
     """Materialize A as a dense (N, N) float64 matrix (small meshes only)."""
     shape = coeffs.shape
     n = int(np.prod(shape))
-    A = np.eye(n, dtype=np.float64)
+    if coeffs.diag is None:
+        A = np.eye(n, dtype=np.float64)
+    else:
+        A = np.diag(np.asarray(coeffs.diag, np.float64).ravel())
     idx = np.arange(n).reshape(shape)
     for name, cf in coeffs.diags.items():
         cf = np.asarray(cf, dtype=np.float64)
@@ -385,6 +423,50 @@ def convection_diffusion(
     return StencilCoeffs(
         {n: jnp.full(shape, raw[n] / diag, dtype=dtype) for n in names}
     )
+
+
+def heterogeneous_poisson(
+    key: jax.Array,
+    shape: tuple[int, ...],
+    dtype=jnp.float32,
+    *,
+    contrast: float = 2.0,
+    spec: StencilSpec | None = None,
+) -> StencilCoeffs:
+    """Raw (non-normalized) variable-coefficient diffusion operator.
+
+    A log-normal cell diffusivity ``k = exp(contrast * N(0,1))`` couples
+    each pair of neighbors with the face average ``(k_i + k_j)/2``; the
+    stored main diagonal is the (variable) row sum of the couplings, with
+    edge-replicated boundary faces so every row is weakly dominant.  This
+    is the workload where Jacobi preconditioning (``M^-1 = D^-1``) does
+    real work — the paper's operators arrive pre-normalized, this one does
+    not.
+    """
+    spec = _default_spec(shape, spec)
+    k = jnp.exp(contrast * jax.random.normal(key, shape, jnp.float32))
+
+    def shift_edge(a, off):
+        for axis, o in enumerate(off):
+            if o == 0:
+                continue
+            pad = [(0, 0)] * a.ndim
+            idx = [slice(None)] * a.ndim
+            if o > 0:
+                pad[axis] = (0, o)
+                idx[axis] = slice(o, None)
+            else:
+                pad[axis] = (-o, 0)
+                idx[axis] = slice(0, o)
+            a = jnp.pad(a, pad, mode="edge")[tuple(idx)]
+        return a
+
+    couplings = {offset_name(o): (k + shift_edge(k, o)) / 2.0
+                 for o in spec.offsets}
+    diag = sum(couplings.values())
+    return StencilCoeffs(
+        {n: (-c).astype(dtype) for n, c in couplings.items()},
+        diag=diag.astype(dtype))
 
 
 # Central-difference second-derivative weights a_k (k = 1..r) of order 2r;

@@ -22,7 +22,6 @@ import dataclasses
 import queue
 import threading
 
-import jax
 import numpy as np
 
 

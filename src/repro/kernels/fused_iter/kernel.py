@@ -19,8 +19,6 @@ paper's FMAC discipline (Table I mixed column).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

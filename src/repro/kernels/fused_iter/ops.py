@@ -9,6 +9,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import resolve_interpret
+
 LANES = 128
 DEFAULT_BM = 512
 
@@ -27,8 +29,9 @@ def _like(flat: jax.Array, a: jax.Array):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def update_q_dots(alpha, r, s, y, *, interpret: bool = True):
+def update_q_dots(alpha, r, s, y, *, interpret: bool | None = None):
     from repro.kernels.fused_iter.kernel import update_q_dots_pallas
+    interpret = resolve_interpret(interpret)
     r2, bm = _to_rows(r)
     s2, _ = _to_rows(s)
     y2, _ = _to_rows(y)
@@ -38,8 +41,9 @@ def update_q_dots(alpha, r, s, y, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def update_xr_dots(alpha, omega, x, p, q, y, r0, *, interpret: bool = True):
+def update_xr_dots(alpha, omega, x, p, q, y, r0, *, interpret: bool | None = None):
     from repro.kernels.fused_iter.kernel import update_xr_dots_pallas
+    interpret = resolve_interpret(interpret)
     arrs = [_to_rows(a)[0] for a in (x, p, q, y, r0)]
     bm = _to_rows(x)[1]
     xo, ro, r0r, rr = update_xr_dots_pallas(
@@ -48,8 +52,9 @@ def update_xr_dots(alpha, omega, x, p, q, y, r0, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def update_p(beta, omega, r, p, s, *, interpret: bool = True):
+def update_p(beta, omega, r, p, s, *, interpret: bool | None = None):
     from repro.kernels.fused_iter.kernel import update_p_pallas
+    interpret = resolve_interpret(interpret)
     r2, bm = _to_rows(r)
     p2, _ = _to_rows(p)
     s2, _ = _to_rows(s)
@@ -59,8 +64,9 @@ def update_p(beta, omega, r, p, s, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def dot_mixed(a, b, *, interpret: bool = True):
+def dot_mixed(a, b, *, interpret: bool | None = None):
     from repro.kernels.fused_iter.kernel import dot_mixed_pallas
+    interpret = resolve_interpret(interpret)
     a2, bm = _to_rows(a)
     b2, _ = _to_rows(b)
     return dot_mixed_pallas(a2, b2, bm=bm, interpret=interpret)[0, 0]

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.compat import HAS_PL_ELEMENT
+from repro.compat import HAS_PL_ELEMENT, resolve_interpret
 from repro.core.stencil import StencilCoeffs
 from repro.kernels.stencil7.ops import ORDER, pick_zc
 
@@ -57,7 +57,8 @@ def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,
 
 
 def _call(coeffs: StencilCoeffs, v: jax.Array, w: jax.Array, *, two_dots: bool,
-          accum_dtype=jnp.float32, interpret: bool = True):
+          accum_dtype=jnp.float32, interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     bx, by, Z = v.shape
     zc = pick_zc(bx, by, Z, jnp.dtype(v.dtype).itemsize)
     vp = jnp.pad(v, ((1, 1), (1, 1), (1, 1)))
@@ -87,7 +88,7 @@ def _call(coeffs: StencilCoeffs, v: jax.Array, w: jax.Array, *, two_dots: bool,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stencil7_dot(coeffs: StencilCoeffs, p: jax.Array, r0: jax.Array, *,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """s = A p, <r0, s> in one pass. Returns (s, r0s_partial)."""
     s, d1, _ = _call(coeffs, p, r0, two_dots=False, interpret=interpret)
     return s, d1
@@ -95,7 +96,7 @@ def stencil7_dot(coeffs: StencilCoeffs, p: jax.Array, r0: jax.Array, *,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def stencil7_two_dots(coeffs: StencilCoeffs, q: jax.Array, *,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """y = A q, <q, y>, <y, y> in one pass. Returns (y, qy, yy)."""
     y, qy, yy = _call(coeffs, q, q, two_dots=True, interpret=interpret)
     return y, qy, yy

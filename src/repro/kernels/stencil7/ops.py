@@ -22,7 +22,7 @@ ORDER = ("xp", "xm", "yp", "ym", "zp", "zm")
 
 
 def stencil7_apply(coeffs: StencilCoeffs, v: jax.Array, *,
-                   accum_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+                   accum_dtype=jnp.float32, interpret: bool | None = None) -> jax.Array:
     """u = A v on a local block (zero-Dirichlet at block edges)."""
     assert v.ndim == 3, "stencil7 kernel is 3D"
     return stencil_nd.stencil_apply(coeffs, v, spec=STAR7,
@@ -30,7 +30,7 @@ def stencil7_apply(coeffs: StencilCoeffs, v: jax.Array, *,
 
 
 def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """Drop-in for halo.local_apply: halo exchange + fused Pallas SpMV."""
     return stencil_nd.pallas_local_apply(coeffs, v, fabric, policy=policy,
                                          overlap=overlap, interpret=interpret)

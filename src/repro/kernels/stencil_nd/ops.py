@@ -9,6 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import resolve_interpret
 from repro.core.stencil import StencilCoeffs, StencilSpec
 
 VMEM_BUDGET_BYTES = 64 * 2 ** 20     # half of a v5e core's ~128MB VMEM
@@ -37,11 +38,18 @@ def _spec_order(coeffs: StencilCoeffs, spec: StencilSpec):
 @functools.partial(jax.jit, static_argnames=("spec", "accum_dtype", "interpret"))
 def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
                   spec: StencilSpec | None = None,
-                  accum_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+                  accum_dtype=jnp.float32,
+                  interpret: bool | None = None) -> jax.Array:
     """u = A v on a local block (zero-Dirichlet at block edges), any spec."""
     from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
 
     assert v.ndim == 3, "the fused kernel is 3D"
+    if coeffs.diag is not None:
+        raise NotImplementedError(
+            "the fused stencil kernel assumes the family's unit diagonal; "
+            "raw operators go through core.operator.pallas_operator, which "
+            "adds the diagonal deviation outside the kernel")
+    interpret = resolve_interpret(interpret)
     spec = spec or coeffs.spec
     r = spec.radius
     bx, by, Z = v.shape
@@ -54,7 +62,7 @@ def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
 
 
 def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """Drop-in for halo.local_apply: depth-r halo exchange + fused kernel.
 
     ``gather_halo`` assembles the (bx+2r, by+2r, Z+2r) block (slab
@@ -68,6 +76,12 @@ def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
     from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
 
     del overlap
+    if coeffs.diag is not None:
+        raise NotImplementedError(
+            "the fused stencil kernel assumes the family's unit diagonal; "
+            "raw operators go through core.operator.pallas_operator, which "
+            "adds the diagonal deviation outside the kernel")
+    interpret = resolve_interpret(interpret)
     spec = coeffs.spec
     r = spec.radius
     cf = coeffs.astype(policy.storage)

@@ -18,10 +18,9 @@ from __future__ import annotations
 
 import math
 
-from repro.models.model import SHAPES, ShapeSpec
+from repro.models.model import ShapeSpec
 from repro.models.param import physical_spec, _mesh_axis_sizes
 from repro.models.transformer import ArchConfig, build_model_defs
-from repro.models import transformer
 
 
 HBM_PER_CHIP = 16 * 2 ** 30

@@ -1,16 +1,19 @@
 """Stencil-solver driver: the paper's experiment at CPU scale, for the
-whole stencil family.
+whole stencil family and the full solver x backend x preconditioner matrix.
 
     PYTHONPATH=src python -m repro.launch.solve --mesh 48 48 32 --policy bf16_mixed
     PYTHONPATH=src python -m repro.launch.solve --stencil star25 --mesh 24 24 16
-    PYTHONPATH=src python -m repro.launch.solve --stencil box27 --mesh 24 24 16
+    PYTHONPATH=src python -m repro.launch.solve --solver cg --problem poisson
+    PYTHONPATH=src python -m repro.launch.solve --precond chebyshev --problem poisson
+    PYTHONPATH=src python -m repro.launch.solve --backend pallas --mesh 16 16 8
 
 Builds a diagonally-dominant system with the requested stencil shape
 (``star7`` is the paper's 7-point MFIX class; ``star25`` the high-order
 seismic shape of Jacquelin et al.; ``box27`` the full-neighborhood cube),
-solves it with distributed BiCGStab on the available device fabric, and
-reports iterations / residuals / timings, with the iterative-refinement
-option for f32-grade accuracy from a 16-bit solve.
+solves it with the selected Krylov solver on the available device fabric —
+through the SPMD halo path or the Pallas fused-kernel backend, optionally
+right-preconditioned — and reports iterations / residuals / timings, with
+the iterative-refinement option for f32-grade accuracy from a 16-bit solve.
 """
 
 from __future__ import annotations
@@ -23,6 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bicgstab, precision, stencil
+from repro.core.operator import BACKENDS
+from repro.core.precond import PRECONDS, PrecondConfig
+from repro.core.solvers import SOLVERS
 from repro.launch.mesh import make_mesh_for_devices
 
 
@@ -32,7 +38,9 @@ def build_problem(args, spec: stencil.StencilSpec):
     key = jax.random.PRNGKey(0)
     problem = args.problem
     if problem is None:  # shape-appropriate default
-        if spec == stencil.STAR7:
+        if args.solver == "cg":
+            problem = "poisson"      # CG wants a symmetric operator
+        elif spec == stencil.STAR7:
             problem = "convdiff"
         elif spec.pattern == "star":
             problem = "seismic"
@@ -42,6 +50,8 @@ def build_problem(args, spec: stencil.StencilSpec):
         return problem, stencil.random_nonsymmetric(key, shape, spec=spec)
     if problem == "poisson":
         return problem, stencil.poisson(shape, spec=spec)
+    if problem == "heterogeneous":
+        return problem, stencil.heterogeneous_poisson(key, shape, spec=spec)
     if problem == "seismic":
         if spec.pattern != "star":
             raise SystemExit("--problem seismic needs a star stencil")
@@ -61,14 +71,28 @@ def main() -> None:
     ap.add_argument("--stencil", default="star7", choices=sorted(stencil.SPECS),
                     help="stencil shape: star7 (paper), star13, star25 "
                          "(seismic RTM), box27")
+    ap.add_argument("--solver", default="bicgstab", choices=sorted(SOLVERS),
+                    help="Krylov solver (bicgstab: the paper's; cg: symmetric)")
+    ap.add_argument("--backend", default="spmd", choices=sorted(BACKENDS),
+                    help="SpMV backend: spmd (halo local_apply), pallas "
+                         "(fused kernels + 3 AllReduces/iter), reference")
+    ap.add_argument("--precond", default="none", choices=sorted(PRECONDS),
+                    help="right preconditioner (local — the collective "
+                         "schedule is unchanged)")
+    ap.add_argument("--cheb-degree", type=int, default=3,
+                    help="Chebyshev polynomial degree (extra local SpMVs "
+                         "per apply, no extra AllReduces)")
     ap.add_argument("--policy", default="bf16_mixed",
                     choices=sorted(precision.POLICIES))
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--maxiter", type=int, default=200)
     ap.add_argument("--problem", default=None,
-                    choices=["convdiff", "random", "poisson", "seismic"],
+                    choices=["convdiff", "random", "poisson", "heterogeneous",
+                             "seismic"],
                     help="default: convdiff for star7, seismic for deeper "
-                         "stars, random for box")
+                         "stars, random for box, poisson for --solver cg; "
+                         "heterogeneous is the raw variable-diagonal case "
+                         "where --precond jacobi does real work")
     ap.add_argument("--refine", action="store_true",
                     help="iterative refinement to f32 accuracy")
     ap.add_argument("--paper-separate-reductions", action="store_true",
@@ -82,12 +106,17 @@ def main() -> None:
     problem, cf = build_problem(args, spec)
     print(f"problem {problem}/{spec.name} (radius {spec.radius}, "
           f"{spec.n_points} points) {shape} on fabric {dict(mesh.shape)} "
-          f"policy={pol.name}")
+          f"solver={args.solver} backend={args.backend} "
+          f"precond={args.precond} policy={pol.name}")
 
     x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
     b = stencil.rhs_for_solution(cf, x_true)
 
     if args.refine:
+        if (args.solver, args.backend, args.precond) != ("bicgstab", "spmd", "none"):
+            raise SystemExit(
+                "--refine drives its own inner bicgstab/spmd solves and does "
+                "not honor --solver/--backend/--precond; drop those flags")
         t0 = time.time()
         x, rels = bicgstab.solve_refined(cf, b, mesh=mesh, inner_policy=pol)
         dt = time.time() - t0
@@ -97,10 +126,12 @@ def main() -> None:
         print(f"max err vs manufactured solution: {err:.3e}  ({dt:.2f}s)")
         return
 
+    pconf = PrecondConfig(name=args.precond, degree=args.cheb_degree)
     t0 = time.time()
     res = bicgstab.solve_distributed(
         mesh, cf, b.astype(pol.storage), tol=args.tol, maxiter=args.maxiter,
-        policy=pol, fused_reductions=not args.paper_separate_reductions)
+        policy=pol, solver=args.solver, backend=args.backend, precond=pconf,
+        fused_reductions=not args.paper_separate_reductions)
     jax.block_until_ready(res.x)
     dt = time.time() - t0
     r = np.asarray(b, np.float64) - np.asarray(

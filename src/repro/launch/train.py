@@ -11,7 +11,6 @@ driver only touches jax-portable APIs (make_mesh / NamedSharding / jit).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 import time
 

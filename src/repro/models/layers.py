@@ -14,8 +14,6 @@ running sum.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 
 import jax

@@ -9,9 +9,7 @@ allocates — the dry-run contract (DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,7 @@ from repro.models.param import (
     ParamDef, abstract_tree, count_params, init_tree, physical_spec, sharding_tree,
 )
 from repro.models.transformer import ArchConfig
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.optim.adamw import AdamWState, adamw_update, cosine_lr
 
 
 # ---------------------------------------------------------------------------

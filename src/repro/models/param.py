@@ -14,7 +14,6 @@ import contextlib
 import contextvars
 import dataclasses
 import math
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

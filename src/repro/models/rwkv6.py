@@ -21,7 +21,6 @@ Fig. 3 — the state carry between chunks is a one-sided halo exchange, and
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

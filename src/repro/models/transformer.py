@@ -11,7 +11,6 @@ and the standard production pattern (MaxText-style scan + remat).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -19,10 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import time
 from typing import Callable
 
-import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMData

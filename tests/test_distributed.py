@@ -1,8 +1,6 @@
 """Distributed (shard_map) solver tests — run in subprocesses with 8 fake
 devices so the main pytest process keeps a single CpuDevice."""
 
-import pytest
-
 
 def test_distributed_apply_matches_ref(subproc):
     subproc("""

@@ -4,9 +4,7 @@ devices and is exercised by the sweep (results/dryrun) + a subprocess test."""
 
 import importlib.util
 import json
-import math
 import os
-import sys
 
 import pytest
 
@@ -86,7 +84,6 @@ def test_probe_config_shapes():
 
 
 def test_lm_memory_estimate_orders_of_magnitude():
-    import jax
     from repro.configs import get_config
     from repro.launch.roofline_model import lm_cell_memory_estimate
     from repro.models.model import SHAPES

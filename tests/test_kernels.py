@@ -129,7 +129,7 @@ def test_dot_mixed_property(n, seed):
 
 def test_pallas_solver_integration():
     """Full BiCGStab with the fused kernels as the AXPY/dot engine."""
-    from repro.core import bicgstab, precision
+    from repro.core import bicgstab
 
     shape = (5, 5, 8)
     cf = stencil.random_nonsymmetric(jax.random.PRNGKey(7), shape)

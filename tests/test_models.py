@@ -9,7 +9,6 @@ import pytest
 
 from repro.configs import ARCH_IDS, ALIASES, get_config, get_smoke
 from repro.models import model as M, transformer
-from repro.models.transformer import ArchConfig
 from repro.optim.adamw import adamw_init
 
 
