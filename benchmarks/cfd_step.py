@@ -1,0 +1,119 @@
+"""Paper Table II split for the CFD application: % of one SIMPLE outer
+iteration spent in the linear solves vs forming the matrices.
+
+The paper reports MFIX spending 50-70% of its time in the (BiCGStab) linear
+solver and most of the rest forming coefficients — the split that motivates
+putting the whole application, not just the solve, on the fabric.  This
+benchmark measures that split for this repo's SIMPLE implementation per
+{backend x preconditioner} cell: the full step is timed end-to-end, a
+formation-only variant (same halo gathers, same three systems, no solves)
+is timed separately, and the difference is attributed to the solves.
+
+Emits ``results/cfd_step.json`` plus ``name,metric,value`` CSV rows
+(the benchmarks/run.py contract).  ``--smoke`` shrinks the grid for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+CELLS = (("reference", "none"), ("reference", "jacobi"),
+         ("spmd", "none"), ("spmd", "jacobi"))
+
+
+def _time_fn(fn, args, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*args))          # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def measure_cell(cfg, opts, mesh, state, reps: int) -> dict:
+    from repro.apps.cfd import make_step_fn
+
+    u, v, p = state
+    step = make_step_fn(cfg, opts, mesh)
+    form = make_step_fn(cfg, opts, mesh, form_only=True)
+    t_full = _time_fn(step, (u, v, p, u, v), reps)
+    t_form = _time_fn(form, (u, v, p, u, v), reps)
+    t_solve = max(t_full - t_form, 0.0)
+    return {
+        "backend": opts.backend,
+        "precond": (opts.precond if isinstance(opts.precond, str)
+                    else opts.precond.name),
+        "rows": "unit-diagonal" if opts.normalize else "raw",
+        "step_ms": t_full * 1e3,
+        "form_ms": t_form * 1e3,
+        "solve_ms": t_solve * 1e3,
+        "solve_pct": 100.0 * t_solve / t_full,
+        "form_pct": 100.0 * t_form / t_full,
+    }
+
+
+def sweep(*, smoke: bool = False) -> dict:
+    from repro.apps.cfd import CFDConfig, SolverOptions, make_step_fn
+    from repro.apps.cfd.grid import cell_state
+    from repro.launch.mesh import make_mesh_for_devices
+
+    n = 16 if smoke else 32
+    reps = 3 if smoke else 10
+    cfg = CFDConfig(n=n, reynolds=100.0)
+    mesh = make_mesh_for_devices()
+
+    # measure on a partially developed flow, not the zero field
+    u, v, p = cell_state(cfg)
+    warm = make_step_fn(cfg, SolverOptions())
+    for _ in range(5):
+        u, v, p, _res, _m = warm(u, v, p, u, v)
+
+    cells = []
+    for backend, precond in CELLS:
+        # raw rows so Jacobi preconditioning is real registry work, not a
+        # no-op on pre-normalized coefficients
+        opts = SolverOptions(backend=backend, precond=precond,
+                             normalize=(precond == "none"))
+        # the reference backend is single-address-space only
+        cell_mesh = mesh if backend == "spmd" else None
+        cells.append(measure_cell(cfg, opts, cell_mesh, (u, v, p), reps))
+    return {
+        "generated_by": "benchmarks/cfd_step.py",
+        "smoke": smoke,
+        "grid": [n, n],
+        "inner_iters": {"momentum": cfg.inner_iters_mom,
+                        "pressure": cfg.inner_iters_p},
+        "fabric": "x".join(str(s) for s in mesh.devices.shape),
+        "paper_table2": "MFIX: 50-70% of time in the linear solver",
+        "cells": cells,
+    }
+
+
+def run(*, smoke: bool = False) -> list[str]:
+    record = sweep(smoke=smoke)
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "cfd_step.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    rows = [f"cfd_step,json_path,{path}"]
+    for c in record["cells"]:
+        tag = f"{c['backend']}_{c['precond']}"
+        assert 0.0 < c["solve_pct"] < 100.0, f"degenerate split for {tag}: {c}"
+        rows.append(f"cfd_step,{tag}_step_ms,{c['step_ms']:.1f}")
+        rows.append(f"cfd_step,{tag}_solve_pct,{c['solve_pct']:.1f}")
+        rows.append(f"cfd_step,{tag}_form_pct,{c['form_pct']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + few reps (CI)")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)

@@ -12,8 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.apps.cfd import CavityConfig, simple_step
 from repro.core.perfmodel import mfix_timesteps_per_second
-from repro.core.simple_cfd import CavityConfig, simple_step
 
 
 def run() -> list[str]:

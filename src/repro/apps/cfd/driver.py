@@ -1,0 +1,364 @@
+"""SIMPLE drivers: the application loop over the pluggable solver stack.
+
+One SIMPLE outer iteration (paper §VI Alg. 2) is: form u/v momentum systems,
+solve each with a few Krylov iterations, form the pressure-correction
+system, solve it, under-relaxed correct.  Here every inner solve goes
+through the same registries as ``launch/solve.py`` — ``core.operator``
+backends (reference / spmd), ``core.solvers`` (bicgstab / cg) and
+``core.precond`` — so ``--solver/--backend/--precond/--policy`` mean the
+same thing for the CFD application as for the bare stencil solve.
+
+Distribution: with a multi-device mesh the *whole* outer iteration runs
+inside one ``shard_map`` — matrix formation reads neighbor face velocities
+via ``gather_halo`` (corner-carrying, the cross-velocity averages touch
+diagonal neighbors), and the formed rows feed the distributed solver loop
+unchanged (its SpMV does its own depth-1 halo exchanges, its dots psum over
+the fabric).  The communication per outer iteration is therefore exactly:
+formation halos + (inner iterations x the solver's 3-AllReduce schedule).
+
+Transient mode adds the implicit-Euler inertial term and marches
+checkpointed time steps through ``checkpoint.CheckpointManager`` +
+``runtime.FaultTolerantRunner`` (restart replays bit-identically — the step
+is deterministic in the restored state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.apps.cfd.grid import (
+    CFDConfig, cell_state, from_staggered, global_indices, to_staggered,
+)
+from repro.apps.cfd.momentum import AP_FLOOR, form_u_system, form_v_system, window
+from repro.apps.cfd.pressure import divergence, form_pressure_system
+from repro.compat import shard_map
+from repro.core.halo import FabricAxes, gather_halo
+from repro.core.operator import BACKENDS, make_operator
+from repro.core.precond import PrecondConfig, build_precond
+from repro.core.solvers import get_solver
+from repro.core.stencil import StencilCoeffs
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """Which pieces of the solver stack the inner solves are routed through.
+
+    ``normalize=True`` is the paper's scheme: rows pre-scaled to unit
+    diagonal before the solve ("we only store six other diagonals"), where
+    Jacobi preconditioning is the identity.  ``normalize=False`` hands the
+    solver the *raw* rows with the stored ``aP`` diagonal — the case where
+    ``precond="jacobi"`` does real work through the registry.
+    """
+
+    solver: str = "bicgstab"
+    backend: str = "reference"
+    precond: str | PrecondConfig = "none"
+    normalize: bool = True
+    cheb_degree: int = 3
+
+    def precond_config(self) -> PrecondConfig:
+        if isinstance(self.precond, PrecondConfig):
+            return self.precond
+        return PrecondConfig(name=self.precond, degree=self.cheb_degree)
+
+
+def _reduce_names(fabric: FabricAxes) -> tuple[str, ...]:
+    return tuple(a for a, k in ((fabric.x, fabric.nx), (fabric.y, fabric.ny))
+                 if a is not None and k > 1)
+
+
+def _pmax(x, names):
+    return jax.lax.pmax(x, names) if names else x
+
+
+def _psum(x, names):
+    return jax.lax.psum(x, names) if names else x
+
+
+def _system_coeffs(opts: SolverOptions, policy, system, b):
+    """(aP, aE, aW, aN, aS), b -> solver-facing (StencilCoeffs, rhs).
+
+    The normalization divisions run in f32 on the clamped diagonal; only the
+    finished coefficients are cast to ``policy.storage`` (the bf16 clamp
+    bugfix — see momentum.py).
+    """
+    aP, aE, aW, aN, aS = system
+    aP = jnp.maximum(aP, AP_FLOOR)
+    if opts.normalize:
+        inv = 1.0 / aP
+        cf = StencilCoeffs({"xp": -aE * inv, "xm": -aW * inv,
+                            "yp": -aN * inv, "ym": -aS * inv})
+        b = b * inv
+    else:
+        cf = StencilCoeffs({"xp": -aE, "xm": -aW, "yp": -aN, "ym": -aS},
+                           diag=aP)
+    return cf.astype(policy.storage), b.astype(policy.storage)
+
+
+def _inner_solve(cfg: CFDConfig, opts: SolverOptions, pconf: PrecondConfig,
+                 fabric: FabricAxes, system, b, x0, iters: int):
+    """One registry-routed inner solve; returns the f32 solution field."""
+    pol = cfg.policy
+    cf, bs = _system_coeffs(opts, pol, system, b)
+    op = make_operator(opts.backend, cf, fabric, policy=pol)
+    M = build_precond(pconf, op)
+    res = get_solver(opts.solver)(
+        op, bs, x0.astype(pol.storage), tol=cfg.inner_tol, maxiter=iters,
+        policy=pol, precond=M)
+    return res.x.astype(jnp.float32)
+
+
+def _step_local(cfg: CFDConfig, opts: SolverOptions, pconf: PrecondConfig,
+                fabric: FabricAxes, red: tuple[str, ...],
+                u, v, p, u_t, v_t, ox, oy, *, form_only: bool = False):
+    """One SIMPLE outer iteration on the local block (runs plain or inside
+    shard_map — ``fabric``/``red``/``ox``/``oy`` carry the difference)."""
+    n = cfg.n
+    h = 1.0 / n
+    gi, gj = global_indices(n, u.shape, ox, oy)
+
+    # ---- formation halos (old fields; corners for cross-velocity reads) --
+    up = gather_halo(u, fabric, 1, corners=True)
+    vp = gather_halo(v, fabric, 1, corners=True)
+    pp = gather_halo(p, fabric, 1)
+    aPu, aEu, aWu, aNu, aSu, bu, du = form_u_system(cfg, up, vp, pp, u, u_t, gi, gj)
+    aPv, aEv, aWv, aNv, aSv, bv, dv = form_v_system(cfg, up, vp, pp, v, v_t, gi, gj)
+
+    if form_only:
+        # benchmark slice: all three systems formed, nothing solved — the
+        # continuity rows are formed from the unstarred field
+        usp = gather_halo(u, fabric, 1)
+        vsp = gather_halo(v, fabric, 1)
+        div0 = divergence(cfg, u, v, usp, vsp, gi)
+        dup = gather_halo(du, fabric, 1)
+        dvp = gather_halo(dv, fabric, 1)
+        psys = form_pressure_system(cfg, du, dv, dup, dvp, div0, gi, gj)
+        parts = (aPu, bu, du, aPv, bv, dv) + psys
+        return _psum(sum(a.sum() for a in parts), red)
+
+    # ---- momentum predictors ---------------------------------------------
+    u_star = _inner_solve(cfg, opts, pconf, fabric,
+                          (aPu, aEu, aWu, aNu, aSu), bu, u,
+                          cfg.inner_iters_mom)
+    v_star = _inner_solve(cfg, opts, pconf, fabric,
+                          (aPv, aEv, aWv, aNv, aSv), bv, v,
+                          cfg.inner_iters_mom)
+    mom_res_u = _pmax(jnp.abs(u_star - u).max(), red)
+
+    if cfg.scenario == "channel":
+        # global mass defect folded onto the zero-gradient outlet faces so
+        # the pressure correction sees a solvable (net-zero-source) system
+        influx = jnp.float32(cfg.u_in)          # u_in * n faces * h = u_in
+        out_faces = jnp.where(gi == n - 1, u_star, 0.0)
+        outflux = h * _psum(out_faces.sum(), red)
+        u_star = jnp.where(gi == n - 1,
+                           u_star + (influx - outflux) / (n * h), u_star)
+
+    # ---- pressure correction ---------------------------------------------
+    usp = gather_halo(u_star, fabric, 1)
+    vsp = gather_halo(v_star, fabric, 1)
+    div = divergence(cfg, u_star, v_star, usp, vsp, gi)
+    dup = gather_halo(du, fabric, 1)
+    dvp = gather_halo(dv, fabric, 1)
+    aPp, aEp, aWp, aNp, aSp, bp = form_pressure_system(
+        cfg, du, dv, dup, dvp, div, gi, gj)
+    p_corr = _inner_solve(cfg, opts, pconf, fabric,
+                          (aPp, aEp, aWp, aNp, aSp), bp, jnp.zeros_like(p),
+                          cfg.inner_iters_p)
+
+    # ---- under-relaxed corrections ---------------------------------------
+    pcp = gather_halo(p_corr, fabric, 1)
+    u_new = u_star + du * (p_corr - window(pcp, 1, 0))
+    v_new = v_star + dv * (p_corr - window(pcp, 0, 1))
+    p_new = p + cfg.alpha_p * p_corr
+    cont_res = _pmax(jnp.abs(div).max(), red)
+    return u_new, v_new, p_new, cont_res, mom_res_u
+
+
+def _validate(cfg: CFDConfig, opts: SolverOptions, mesh) -> None:
+    if opts.backend not in BACKENDS:
+        raise KeyError(f"unknown backend {opts.backend!r}; have {sorted(BACKENDS)}")
+    if opts.backend == "pallas":
+        raise NotImplementedError(
+            "the 2D CFD fields have no Pallas kernel yet; use backend='spmd' "
+            "(same shard_map/halo path, jnp local apply)")
+    if mesh is not None and opts.backend == "reference" and mesh.devices.size > 1:
+        raise ValueError(
+            "backend='reference' is single-address-space only; use "
+            "backend='spmd' on a multi-device mesh")
+
+
+def make_step_fn(cfg: CFDConfig, opts: SolverOptions = SolverOptions(),
+                 mesh=None, *, form_only: bool = False):
+    """Compile one SIMPLE outer iteration.
+
+    Returns ``step(u, v, p, u_t, v_t) -> (u, v, p, cont_res, mom_res_u)``
+    on cell-shaped fields (``u_t``/``v_t`` are the previous time level,
+    ignored when ``cfg.dt is None`` — pass the current fields).  With a mesh
+    and a distributed backend the whole iteration (formation + inner
+    solves) is one ``shard_map``.
+    """
+    _validate(cfg, opts, mesh)
+    pconf = opts.precond_config()
+
+    if mesh is None or opts.backend == "reference" or mesh.devices.size == 1:
+        fabric = FabricAxes()
+
+        def step(u, v, p, u_t, v_t):
+            return _step_local(cfg, opts, pconf, fabric, (), u, v, p,
+                               u_t, v_t, 0, 0, form_only=form_only)
+
+        return jax.jit(step)
+
+    fabric = FabricAxes.from_mesh(mesh)
+    if fabric.nz > 1:
+        raise ValueError("the 2D CFD app needs a 2D fabric (no pod axis)")
+    if cfg.n % fabric.nx or cfg.n % fabric.ny:
+        raise ValueError(
+            f"n={cfg.n} must divide the fabric {fabric.nx}x{fabric.ny}")
+    bx, by = cfg.n // fabric.nx, cfg.n // fabric.ny
+    red = _reduce_names(fabric)
+
+    def local(u, v, p, u_t, v_t):
+        ox = jax.lax.axis_index(fabric.x) * bx
+        oy = jax.lax.axis_index(fabric.y) * by
+        return _step_local(cfg, opts, pconf, fabric, red, u, v, p,
+                           u_t, v_t, ox, oy, form_only=form_only)
+
+    spec = P(fabric.x, fabric.y)
+    scalar = P()
+    out_specs = scalar if form_only else (spec, spec, spec, scalar, scalar)
+    mapped = shard_map(local, mesh=mesh, in_specs=(spec,) * 5,
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped)
+
+
+# ---------------------------------------------------------------------------
+# Steady drivers (and the legacy core.simple_cfd surface)
+# ---------------------------------------------------------------------------
+
+def solve_steady(cfg: CFDConfig, opts: SolverOptions = SolverOptions(),
+                 mesh=None):
+    """Run SIMPLE to convergence; returns cell-shaped (u, v, p, history)."""
+    cfg = dataclasses.replace(cfg, dt=None)
+    u, v, p = cell_state(cfg)
+    step = make_step_fn(cfg, opts, mesh)
+    history = []
+    for _ in range(cfg.outer_iters):
+        u, v, p, res, _mres = step(u, v, p, u, v)
+        history.append(float(res))
+        if history[-1] < cfg.tol:
+            break
+    return u, v, p, history
+
+
+def solve_cavity(cfg: CFDConfig, opts: SolverOptions = SolverOptions(),
+                 mesh=None):
+    """Legacy surface: staggered (u, v, p, history) of the steady cavity."""
+    u, v, p, history = solve_steady(cfg, opts, mesh)
+    u_stag, v_stag = to_staggered(u, v)
+    return u_stag, v_stag, p, history
+
+
+def simple_step(cfg: CFDConfig, u, v, p, *, opts: SolverOptions = SolverOptions()):
+    """Legacy surface: one SIMPLE iteration on *staggered* fields.
+
+    Same signature/returns as the seed's ``core.simple_cfd.simple_step``;
+    the body now routes through the registry stack (reference backend).
+    """
+    uc, vc = from_staggered(u, v)
+    un, vn, pn, res, mres = _step_local(
+        cfg, opts, opts.precond_config(), FabricAxes(), (),
+        uc, vc, p, uc, vc, 0, 0)
+    us, vs = to_staggered(un, vn)
+    return us, vs, pn, res, {"mom_res_u": mres}
+
+
+# ---------------------------------------------------------------------------
+# Transient, checkpointed driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TransientConfig:
+    """Time-marching knobs: implicit-Euler steps of ``dt``, each stepped to
+    (approximate) convergence by ``outers_per_step`` under-relaxed SIMPLE
+    outer iterations, checkpointed every ``checkpoint_every`` steps."""
+
+    dt: float = 0.02
+    n_steps: int = 50
+    outers_per_step: int = 20
+    checkpoint_every: int = 10
+    max_restarts: int = 3
+    async_checkpoint: bool = False
+
+
+class _StepStream:
+    """Duck-types the runner's data pipeline: stateless (step, batch=None)."""
+
+    def iterate(self, start_step: int):
+        return ((s, None) for s in itertools.count(start_step))
+
+
+def make_transient_step(cfg: CFDConfig, tcfg: TransientConfig,
+                        opts: SolverOptions = SolverOptions(), mesh=None):
+    """``timestep(state) -> (state, metrics)`` advancing one dt."""
+    cfg = dataclasses.replace(cfg, dt=tcfg.dt)
+    step = make_step_fn(cfg, opts, mesh)
+
+    def timestep(state):
+        u, v, p = state
+        u_t, v_t = u, v
+        res = mres = jnp.float32(0.0)
+        for _ in range(tcfg.outers_per_step):
+            u, v, p, res, mres = step(u, v, p, u_t, v_t)
+        return (u, v, p), {"continuity": res, "mom_res_u": mres}
+
+    return timestep
+
+
+def run_transient(cfg: CFDConfig, tcfg: TransientConfig,
+                  opts: SolverOptions = SolverOptions(), mesh=None, *,
+                  checkpoint_dir: str | None = None, failure_hook=None):
+    """March ``n_steps`` time steps; returns (final state, metrics history).
+
+    With ``checkpoint_dir`` the march runs under ``FaultTolerantRunner``:
+    periodic (optionally async) checkpoints, restore-and-replay on any step
+    failure, and resume-from-latest when the directory already holds a
+    checkpoint — long runs survive preemption.  Restart is deterministic:
+    the restored state replays to bit-identical fields.
+    """
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import FaultTolerantRunner, RunnerConfig
+
+    timestep = make_transient_step(cfg, tcfg, opts, mesh)
+    state = cell_state(cfg)
+
+    if checkpoint_dir is None:
+        metrics = []
+        for s in range(tcfg.n_steps):
+            state, m = timestep(state)
+            metrics.append({"step": s, **{k: float(x) for k, x in m.items()}})
+        return state, metrics
+
+    def train_step(params, opt_state, batch):
+        new_state, m = timestep(params)
+        return new_state, opt_state, m
+
+    runner = FaultTolerantRunner(
+        RunnerConfig(total_steps=tcfg.n_steps,
+                     checkpoint_every=tcfg.checkpoint_every,
+                     max_restarts=tcfg.max_restarts,
+                     async_checkpoint=tcfg.async_checkpoint),
+        train_step=train_step, data=_StepStream(),
+        ckpt=CheckpointManager(checkpoint_dir, keep=3),
+        failure_hook=failure_hook)
+    final_state, _ = runner.run(state, ())
+    # a fault replay re-appends the steps between the restored checkpoint
+    # and the failure point; keep one (the replayed, i.e. last) entry per step
+    by_step = {m["step"]: m for m in runner.metrics_history}
+    return final_state, [by_step[s] for s in sorted(by_step)]

@@ -1,0 +1,108 @@
+"""Staggered MAC grid bookkeeping for the SIMPLE CFD application.
+
+Storage layout: every field is a cell-shaped ``(n, n)`` array so the three
+linear systems of one SIMPLE iteration all live on the *same* mesh and shard
+identically under ``shard_map`` (the whole point of the apps/cfd refactor —
+one ``PartitionSpec`` serves momentum and continuity alike):
+
+* ``u[i, j]``  — x-velocity at the EAST face of cell ``(i, j)``
+  (staggered face ``i+1``; the west boundary face is not stored — it is a
+  known boundary value: 0 at a wall, ``u_in`` at a channel inlet);
+* ``v[i, j]``  — y-velocity at the NORTH face of cell ``(i, j)``
+  (staggered face ``j+1``; the south boundary face is the wall);
+* ``p[i, j]``  — pressure at the cell center.
+
+The classic ``(n+1, n)`` / ``(n, n+1)`` staggered arrays remain the public
+I/O format of the legacy ``core.simple_cfd`` surface; :func:`to_staggered` /
+:func:`from_staggered` convert.  With cell-shaped storage, the zero filled
+into halos by ``gather_halo`` at fabric edges *is* the no-slip wall value,
+so boundary conditions and SPMD decomposition use one mechanism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Policy, F32
+
+SCENARIOS = ("cavity", "channel")
+
+
+@dataclasses.dataclass
+class CFDConfig:
+    """SIMPLE configuration (field order keeps ``CavityConfig`` compatible).
+
+    The inner-solve limits follow the paper: "limited to 5 iterations for
+    transport [and] 20 for continuity".  ``dt=None`` is the steady SIMPLE
+    loop; a finite ``dt`` adds the implicit-Euler inertial term and the
+    driver marches ``outer_iters``-relaxed outer loops per time step.
+    """
+
+    n: int = 32                 # cells per side
+    reynolds: float = 100.0
+    lid_velocity: float = 1.0
+    alpha_u: float = 0.7        # momentum under-relaxation
+    alpha_p: float = 0.3        # pressure under-relaxation
+    outer_iters: int = 200
+    inner_tol: float = 1e-4     # paper: solver limited to a few iterations
+    inner_iters_mom: int = 5    # paper: "limited to 5 iterations for transport"
+    inner_iters_p: int = 20     # paper: "20 for continuity"
+    tol: float = 1e-5
+    policy: Policy = F32
+    scenario: str = "cavity"    # "cavity" | "channel"
+    u_in: float = 1.0           # channel inflow velocity
+    dt: float | None = None     # None => steady; finite => transient term
+
+    def __post_init__(self):
+        if self.scenario not in SCENARIOS:
+            raise ValueError(f"unknown scenario {self.scenario!r}; have {SCENARIOS}")
+
+
+#: Legacy name (seed API) — same dataclass, cavity defaults.
+CavityConfig = CFDConfig
+
+
+def cell_state(cfg: CFDConfig):
+    """Zero-initialized (u, v, p) cell-shaped state."""
+    z = jnp.zeros((cfg.n, cfg.n), jnp.float32)
+    return z, z, z
+
+
+def to_staggered(u: jax.Array, v: jax.Array):
+    """Cell-shaped (u, v) -> classic staggered ``(n+1, n)`` / ``(n, n+1)``.
+
+    The prepended boundary face is the homogeneous wall value; channel inlet
+    faces carry ``u_in`` only inside the solver (they are boundary data, not
+    state), so the staggered view shows the stored faces plus zero walls.
+    """
+    n = u.shape[1]
+    u_stag = jnp.concatenate([jnp.zeros((1, n), u.dtype), u], axis=0)
+    v_stag = jnp.concatenate([jnp.zeros((v.shape[0], 1), v.dtype), v], axis=1)
+    return u_stag, v_stag
+
+
+def from_staggered(u_stag: jax.Array, v_stag: jax.Array):
+    """Inverse of :func:`to_staggered` (drops the known boundary faces)."""
+    return u_stag[1:, :], v_stag[:, 1:]
+
+
+def centerline_u(u: jax.Array) -> jax.Array:
+    """u along the vertical centerline of a *staggered* field (Ghia et al.)."""
+    return u[u.shape[0] // 2, :]
+
+
+def global_indices(n: int, shape: tuple[int, int], ox, oy):
+    """(gi, gj) global cell-index grids of a local block at offset (ox, oy).
+
+    Broadcastable ``(bx, 1)`` / ``(1, by)`` — boundary masks (walls, inlet,
+    outlet, reference cell) compare against these so the same formation code
+    runs undistributed (ox = oy = 0) and inside ``shard_map``
+    (ox = axis_index * block).
+    """
+    bx, by = shape
+    gi = (ox + jnp.arange(bx))[:, None]
+    gj = (oy + jnp.arange(by))[None, :]
+    return gi, gj

@@ -57,11 +57,18 @@ MIXED = Policy("bf16_mixed", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16), j
 BF16_PURE = Policy("bf16_pure", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.bfloat16))
 F64 = Policy("f64", jnp.dtype(jnp.float64), jnp.dtype(jnp.float64), jnp.dtype(jnp.float64))
 
-POLICIES = {p.name: p for p in (F32, MIXED, BF16_PURE)}
+POLICIES = {p.name: p for p in (F32, MIXED, BF16_PURE, F64)}
 
 
 def get_policy(name: str) -> Policy:
     try:
-        return POLICIES[name]
+        policy = POLICIES[name]
     except KeyError:
         raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}") from None
+    if name == "f64" and not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "policy 'f64' needs 64-bit mode: call "
+            "jax.config.update('jax_enable_x64', True) (or set JAX_ENABLE_X64=1) "
+            "before building arrays, otherwise every float64 silently degrades "
+            "to float32")
+    return policy

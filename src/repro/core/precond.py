@@ -96,6 +96,12 @@ class JacobiPrecond:
         return (v.astype(self.compute)
                 * self.inv_diag.astype(self.compute)).astype(self.storage)
 
+    def apply_inv(self, v):
+        """``M v`` — exact inverse of :meth:`apply`, used to translate warm
+        starts into hat space (see :func:`warm_start`)."""
+        return (v.astype(self.compute)
+                / self.inv_diag.astype(self.compute)).astype(self.storage)
+
 
 @dataclasses.dataclass(frozen=True)
 class ChebyshevPrecond:
@@ -182,15 +188,31 @@ def build_precond(config: PrecondConfig, op: LinearOperator):
                             storage=pol.storage, compute=pol.compute)
 
 
+def warm_start(precond, x0):
+    """Translate a real-space warm start into hat space: ``x0_hat = M x0``.
+
+    Solvers hand ``x0`` to the hat system ``A M^-1``, whose iterate is
+    ``x_hat = M x``; a preconditioner with an exact ``apply_inv`` therefore
+    maps the guess so the initial residual is ``b - A x0``, exactly the
+    unpreconditioned start (truncated inner solves — e.g. SIMPLE's 5-iter
+    momentum solves — rely on this, or every solve restarts from ``M^-1
+    x0`` instead of ``x0``).  Preconditioners without an inverse (Chebyshev)
+    use the guess as-is: any hat-space start is valid, just not warm.
+    """
+    if x0 is None or precond is None:
+        return x0
+    apply_inv = getattr(precond, "apply_inv", None)
+    return x0 if apply_inv is None else apply_inv(x0)
+
+
 def wrap_right(op: LinearOperator, precond):
     """Right-precondition an operator: returns ``(wrapped_op, unwrap)``.
 
     ``wrapped_op.apply(v) = A(M^-1 v)`` (the hat system — residuals,
     convergence test and collective schedule are identical to the
     unpreconditioned solve); ``unwrap`` maps a hat-space SolveResult back,
-    ``x = M^-1 x_hat``.  A warm start ``x0`` is interpreted in hat space
-    (any starting guess is valid there; the solve still returns the true
-    ``x``).
+    ``x = M^-1 x_hat``.  A warm start ``x0`` is interpreted in hat space;
+    solvers translate real-space guesses with :func:`warm_start`.
     """
     if precond is None or isinstance(precond, IdentityPrecond):
         return op, lambda res: res

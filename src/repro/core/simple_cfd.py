@@ -1,178 +1,23 @@
-"""SIMPLE pressure-velocity coupling on a staggered grid (paper §VI, Alg. 2).
+"""Legacy import surface for the SIMPLE CFD solver (seed API).
 
-The paper sketches MFIX's segregated solver: per outer iteration, form and
-BiCGStab-solve the u/v momentum systems, then a pressure-correction
-(continuity) system, then under-relaxed field updates — with the linear
-solves (this repo's core) taking 50-70% of the work and the matrix forming
-the rest (paper Table II).
+The implementation moved to :mod:`repro.apps.cfd` — a full application
+subsystem whose inner solves run through the operator/solver/preconditioner
+registries (the same pattern as ``core/bicgstab.py`` after the solver-stack
+refactor: the algorithm lives elsewhere, the historical names keep working).
 
-This is a faithful 2D incompressible instance of Alg. 2:
-
-  staggered MAC grid, first-order upwind + central diffusion (the paper's
-  "first order upwinding is the most common scheme"), Jacobi-preconditioned
-  5-point stencil systems handed to repro.core.bicgstab, SIMPLE p' equation
-  with d = A/aP, under-relaxation (alpha_u, alpha_p).
-
-Validated on the lid-driven cavity against Ghia et al. (1982) centerline
-values at Re=100 (tests/test_cfd.py) — the same flow the paper's Joule
-benchmark runs (Figs. 7-8).
+``simple_step`` / ``solve_cavity`` keep the seed's staggered-array
+signatures; new code should import from ``repro.apps.cfd`` and use the
+cell-shaped state + ``SolverOptions`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
+from repro.apps.cfd import (  # noqa: F401
+    CavityConfig, CFDConfig, SolverOptions, centerline_u, simple_step,
+    solve_cavity, solve_steady,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import bicgstab
-from repro.core.precision import Policy, F32
-from repro.core.stencil import StencilCoeffs
-
-
-@dataclasses.dataclass
-class CavityConfig:
-    n: int = 32                 # cells per side
-    reynolds: float = 100.0
-    lid_velocity: float = 1.0
-    alpha_u: float = 0.7        # momentum under-relaxation
-    alpha_p: float = 0.3        # pressure under-relaxation
-    outer_iters: int = 200
-    inner_tol: float = 1e-4     # paper: solver limited to a few iterations
-    inner_iters_mom: int = 5    # paper: "limited to 5 iterations for transport"
-    inner_iters_p: int = 20     # paper: "20 for continuity"
-    tol: float = 1e-5
-    policy: Policy = F32
-
-
-def _upwind_coeffs(Fe, Fw, Fn, Fs, De, Dw, Dn, Ds):
-    aE = De + jnp.maximum(-Fe, 0.0)
-    aW = Dw + jnp.maximum(Fw, 0.0)
-    aN = Dn + jnp.maximum(-Fn, 0.0)
-    aS = Ds + jnp.maximum(Fs, 0.0)
-    aP = aE + aW + aN + aS + (Fe - Fw) + (Fn - Fs)
-    return aP, aE, aW, aN, aS
-
-
-def _solve_unit_diag(aP, aE, aW, aN, aS, b, x0, cfg: CavityConfig, iters: int):
-    """Jacobi-precondition to unit diagonal and hand to BiCGStab.
-
-    Matrix row: aP x_P - aE x_E - aW x_W - aN x_N - aS x_S = b.
-    Unit-diagonal off-diagonals are -a_nb/aP (sign folded into coeffs).
-    """
-    aP = jnp.maximum(aP, 1e-12)
-    coeffs = StencilCoeffs({
-        "xp": -aE / aP, "xm": -aW / aP,
-        "yp": -aN / aP, "ym": -aS / aP,
-    })
-    res = bicgstab.solve_ref(coeffs, b / aP, x0=x0, tol=cfg.inner_tol,
-                             maxiter=iters, policy=cfg.policy)
-    return res.x
-
-
-def simple_step(cfg: CavityConfig, u, v, p):
-    """One SIMPLE outer iteration. u: (n+1, n); v: (n, n+1); p: (n, n).
-
-    Returns (u, v, p, continuity_residual, aux dict of momentum residuals).
-    """
-    n = cfg.n
-    h = 1.0 / n
-    mu = 1.0 / cfg.reynolds      # rho = 1, U = 1, L = 1
-    D = mu                        # D_face = mu * h / h
-
-    # ---- u-momentum (interior faces i=1..n-1) ----------------------------
-    # face fluxes interpolated to u-cv faces; ghost rows implement walls/lid
-    ue = 0.5 * (u[1:, :] + u[:-1, :])              # (n, ny): east/west flux carriers
-    Fe = h * ue[1:, :]                              # for u-cv i=1..n-1
-    Fw = h * ue[:-1, :]
-    vn = 0.5 * (v[1:, :] + v[:-1, :])               # (n-1, n+1) at u-cv corners
-    Fn = h * vn[:, 1:]
-    Fs = h * vn[:, :-1]
-    aP, aE, aW, aN, aS = _upwind_coeffs(Fe, Fw, Fn, Fs, D, D, D, D)
-    # no-slip top/bottom: wall shear via half-cell diffusion, lid adds source
-    b = (p[:-1, :] - p[1:, :]) * h                 # pressure force on u-cv
-    bottom = jnp.zeros_like(aP).at[:, 0].set(2.0 * D)
-    top = jnp.zeros_like(aP).at[:, -1].set(2.0 * D)
-    aP = aP + bottom + top                          # wall-ghost folding
-    b = b.at[:, -1].add(2.0 * D * cfg.lid_velocity)
-    # zero N/S links at walls
-    aN = aN.at[:, -1].set(0.0)
-    aS = aS.at[:, 0].set(0.0)
-    # Patankar in-equation under-relaxation: aP/alpha with old-value anchor —
-    # this (not post-hoc mixing) is what keeps the p'<->momentum loop stable.
-    aP = aP / cfg.alpha_u
-    b = b + (1.0 - cfg.alpha_u) * aP * u[1:-1, :]
-    du = h / jnp.maximum(aP, 1e-12)                 # SIMPLE d-coefficient
-    u_star_int = _solve_unit_diag(aP, aE, aW, aN, aS, b, u[1:-1, :], cfg,
-                                  cfg.inner_iters_mom)
-    u_star = u.at[1:-1, :].set(u_star_int)
-    mom_res_u = jnp.abs(u_star[1:-1, :] - u[1:-1, :]).max()
-
-    # ---- v-momentum (interior faces j=1..n-1) -----------------------------
-    vnn = 0.5 * (v[:, 1:] + v[:, :-1])              # (n, n)
-    Fn2 = h * vnn[:, 1:]
-    Fs2 = h * vnn[:, :-1]
-    uee = 0.5 * (u[:, 1:] + u[:, :-1])              # (n+1, n-1) at v-cv corners
-    Fe2 = h * uee[1:, :]
-    Fw2 = h * uee[:-1, :]
-    aP2, aE2, aW2, aN2, aS2 = _upwind_coeffs(Fe2, Fw2, Fn2, Fs2, D, D, D, D)
-    b2 = (p[:, :-1] - p[:, 1:]) * h
-    left = jnp.zeros_like(aP2).at[0, :].set(2.0 * D)
-    right = jnp.zeros_like(aP2).at[-1, :].set(2.0 * D)
-    aP2 = aP2 + left + right
-    aE2 = aE2.at[-1, :].set(0.0)
-    aW2 = aW2.at[0, :].set(0.0)
-    aP2 = aP2 / cfg.alpha_u
-    b2 = b2 + (1.0 - cfg.alpha_u) * aP2 * v[:, 1:-1]
-    dv = h / jnp.maximum(aP2, 1e-12)
-    v_star_int = _solve_unit_diag(aP2, aE2, aW2, aN2, aS2, b2, v[:, 1:-1], cfg,
-                                  cfg.inner_iters_mom)
-    v_star = v.at[:, 1:-1].set(v_star_int)
-
-    # ---- pressure correction ---------------------------------------------
-    # continuity defect of the starred field per cell
-    div = (u_star[1:, :] - u_star[:-1, :] + v_star[:, 1:] - v_star[:, :-1]) * h
-    # p' coefficients: aE = rho*de*h at interior faces, 0 at boundaries
-    dE = jnp.pad(du, ((0, 1), (0, 0)))              # (n, n): face i+1/2 of cell i
-    dW = jnp.pad(du, ((1, 0), (0, 0)))
-    dN = jnp.pad(dv, ((0, 0), (0, 1)))
-    dS = jnp.pad(dv, ((0, 0), (1, 0)))
-    aEp = dE * h
-    aWp = dW * h
-    aNp = dN * h
-    aSp = dS * h
-    aPp = aEp + aWp + aNp + aSp
-    # fix one reference cell (pure Neumann system is singular)
-    aPp = aPp.at[0, 0].add(1.0)
-    p_corr = _solve_unit_diag(aPp, aEp, aWp, aNp, aSp, -div,
-                              jnp.zeros_like(p), cfg, cfg.inner_iters_p)
-
-    # ---- corrections -------------------------------------------------------
-    u_new = u_star.at[1:-1, :].add(du * (p_corr[:-1, :] - p_corr[1:, :]))
-    v_new = v_star.at[:, 1:-1].add(dv * (p_corr[:, :-1] - p_corr[:, 1:]))
-    p_new = p + cfg.alpha_p * p_corr
-    cont_res = jnp.abs(div).max()
-    return u_new, v_new, p_new, cont_res, {"mom_res_u": mom_res_u}
-
-
-def solve_cavity(cfg: CavityConfig):
-    """Run SIMPLE to convergence. Returns (u, v, p, history of residuals)."""
-    n = cfg.n
-    u = jnp.zeros((n + 1, n), jnp.float32)
-    v = jnp.zeros((n, n + 1), jnp.float32)
-    p = jnp.zeros((n, n), jnp.float32)
-    step = jax.jit(functools.partial(simple_step, cfg))
-    history = []
-    for i in range(cfg.outer_iters):
-        u, v, p, res, aux = step(u, v, p)
-        history.append(float(res))
-        if history[-1] < cfg.tol:
-            break
-    return u, v, p, history
-
-
-def centerline_u(u: jax.Array) -> jax.Array:
-    """u along the vertical centerline (for Ghia et al. comparison)."""
-    n = u.shape[1]
-    return u[u.shape[0] // 2, :]
+__all__ = [
+    "CavityConfig", "CFDConfig", "SolverOptions", "centerline_u",
+    "simple_step", "solve_cavity", "solve_steady",
+]

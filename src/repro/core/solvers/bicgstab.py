@@ -184,9 +184,10 @@ def bicgstab_solver(
     collective schedule are untouched.  Dispatches to the fused-kernel step
     when the operator provides one.
     """
-    from repro.core.precond import wrap_right
+    from repro.core.precond import warm_start, wrap_right
 
     wrapped, unwrap = wrap_right(op, precond)
+    x0 = warm_start(precond, x0)
     if wrapped.fused is not None:
         res = bicgstab_fused_loop(
             wrapped, b, x0, tol=tol, maxiter=maxiter, policy=policy,

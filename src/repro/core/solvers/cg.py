@@ -84,9 +84,10 @@ def cg_solver(
     inner product; the Chebyshev preconditioner (a polynomial in A) commutes
     with A and preserves this, Jacobi only when the diagonal is constant.
     """
-    from repro.core.precond import wrap_right
+    from repro.core.precond import warm_start, wrap_right
 
     wrapped, unwrap = wrap_right(op, precond)
-    res = cg_loop(wrapped.apply, wrapped.dots, b, x0, tol=tol, maxiter=maxiter,
-                  policy=policy, record_history=record_history)
+    res = cg_loop(wrapped.apply, wrapped.dots, b, warm_start(precond, x0),
+                  tol=tol, maxiter=maxiter, policy=policy,
+                  record_history=record_history)
     return unwrap(res)

@@ -99,6 +99,10 @@ def main() -> None:
                     help="paper-faithful: one AllReduce per dot product")
     args = ap.parse_args()
 
+    if args.policy == "f64":
+        # get_policy("f64") refuses to hand out a policy that would silently
+        # degrade; the CLI owns process startup, so it can just enable x64.
+        jax.config.update("jax_enable_x64", True)
     shape = tuple(args.mesh)
     spec = stencil.get_spec(args.stencil)
     pol = precision.get_policy(args.policy)

@@ -1,6 +1,10 @@
 """Distributed (shard_map) solver tests — run in subprocesses with 8 fake
 devices so the main pytest process keeps a single CpuDevice."""
 
+import pytest
+
+pytestmark = pytest.mark.slow   # every test here spawns 8-device subprocesses
+
 
 def test_distributed_apply_matches_ref(subproc):
     subproc("""

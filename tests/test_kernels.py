@@ -167,6 +167,7 @@ def test_stencil7_dot_epilogue(shape):
     np.testing.assert_allclose(float(yy), float(jnp.vdot(s_ref, s_ref)), rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.slow
 def test_pallas_local_apply_in_distributed_solver(subproc):
     """solve_distributed with the Pallas kernel as apply_impl == jnp path."""
     subproc("""

@@ -29,6 +29,7 @@ def _batch_for(cfg, B=2, T=32, seed=1):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow   # ~6 min of XLA compiles across the arch matrix
 def test_smoke_train_step(arch):
     cfg = get_smoke(arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))

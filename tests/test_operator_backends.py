@@ -47,6 +47,7 @@ def test_pallas_backend_raw_diag_correction():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_distributed_pallas_matches_spmd_trajectory(subproc):
     """Acceptance: the Pallas-fused distributed backend reproduces the SPMD
     backend's residual trajectory to policy tolerance (f32 tight, bf16

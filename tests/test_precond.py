@@ -96,6 +96,26 @@ def test_raw_heterogeneous_matches_dense_oracle():
         rtol=1e-4, atol=1e-4)
 
 
+def test_jacobi_warm_start_is_translated_to_hat_space():
+    """A warm start near the solution must help a right-Jacobi solve exactly
+    as it helps the unpreconditioned one: wrap_right's hat-space iterate is
+    ``x_hat = D x``, so solvers must hand it ``D x0``, not ``x0`` (the
+    legacy-path bug that made SIMPLE's truncated inner solves stall)."""
+    shape = (10, 10, 8)
+    cf = stencil.heterogeneous_poisson(jax.random.PRNGKey(3), shape)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    b = stencil.rhs_for_solution(cf, x_true)
+    near = x_true + 1e-4 * jnp.ones_like(x_true)
+    cold = bicgstab.solve_ref(cf, b, tol=1e-8, maxiter=3000, precond="jacobi")
+    warm = bicgstab.solve_ref(cf, b, x0=near, tol=1e-8, maxiter=3000,
+                              precond="jacobi")
+    assert bool(warm.converged)
+    assert int(warm.iterations) < int(cold.iterations), (
+        int(cold.iterations), int(warm.iterations))
+    np.testing.assert_allclose(np.asarray(warm.x), np.asarray(x_true),
+                               rtol=5e-3, atol=5e-3)
+
+
 def test_jacobi_cuts_heterogeneous_iterations():
     shape = (12, 12, 8)
     cf = stencil.heterogeneous_poisson(jax.random.PRNGKey(3), shape,
@@ -127,6 +147,7 @@ def test_preconditioned_solve_across_family(specname):
                                rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_distributed_preconditioned_solve(subproc):
     """Preconditioned BiCGStab inside shard_map (bounds reduced over the
     fabric with pmax) matches the manufactured solution, on both the SPMD

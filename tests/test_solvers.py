@@ -68,6 +68,7 @@ def test_cg_warm_start_reduces_iterations():
     assert bool(warm.converged)
 
 
+@pytest.mark.slow
 def test_distributed_cg_across_family(subproc):
     """Distributed CG (2 fused AllReduces/iter) agrees with the dense oracle
     for star7/star25/box27 SPD problems, in f32 and the mixed policy."""

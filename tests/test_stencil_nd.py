@@ -80,6 +80,7 @@ def test_pick_zc_budget_scales_with_radius():
 
 
 @pytest.mark.parametrize("specname", ["star13", "box27"])
+@pytest.mark.slow
 def test_pallas_local_apply_in_distributed_solver(subproc, specname):
     """solve_distributed with the generic kernel as apply_impl == jnp path,
     on a depth-2 (star13) and corner-carrying (box27) halo."""
