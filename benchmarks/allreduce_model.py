@@ -3,14 +3,20 @@ the fabric-diameter bound).
 
 TPU counterpart: latency model for psum on the 16x16 (and 2x16x16) torus,
 plus the measured AllReduce count per BiCGStab iteration from the compiled
-HLO (3 fused vs 5 paper-faithful separate) — the schedule is the thing this
-repo controls; the per-hop latency is hardware.
+HLO (3 fused vs 5 paper-faithful separate, 1 with the pipelined solvers) —
+the schedule is the thing this repo controls; the per-hop latency is
+hardware.  The per-iteration reduction-latency budget and the predicted
+fabric size where the single-reduction pipelined schedule overtakes the
+fused 3-AllReduce one come from ``perfmodel.SOLVER_COMMS`` /
+``predict_crossover`` (measured counterpart: ``benchmarks/comm_overlap.py``).
 """
 
 import json
 import os
 
-from repro.core.perfmodel import allreduce_latency
+from repro.core.perfmodel import (
+    SOLVER_COMMS, allreduce_latency, predict_crossover,
+)
 
 
 def run() -> list[str]:
@@ -18,8 +24,15 @@ def run() -> list[str]:
     for name, (px, py, pz) in (("16x16", (16, 16, 1)), ("2x16x16", (16, 16, 2))):
         t = allreduce_latency(px, py, pz)
         rows.append(f"allreduce,model_{name}_us,{t * 1e6:.2f}")
+        # per-iteration reduction latency budget per solver schedule
+        for solver, comm in sorted(SOLVER_COMMS.items()):
+            rows.append(f"allreduce,model_{name}_{solver}_iter_us,"
+                        f"{comm.reductions_fused * t * 1e6:.2f}")
     rows.append("allreduce,cs1_measured_us,1.5")
     rows.append("allreduce,cs1_cores,380000")
+    xo = predict_crossover((608, 608, 1536), {"solver": "bicgstab"},
+                           {"solver": "pipelined_bicgstab"})
+    rows.append(f"allreduce,pipelined_crossover_chips,{xo['crossover_chips']}")
     for tag in ("pod1", "pod2"):
         p = f"results/dryrun/cs1_paper__bicgstab_iter__{tag}.json"
         if os.path.exists(p):

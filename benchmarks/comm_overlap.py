@@ -1,0 +1,207 @@
+"""Communication-scheduling sweep: {solver x schedule x stencil}.
+
+The schedule is the one lever this repo controls on a commodity fabric
+(paper §IV: the CS-1 wins because halo transfers and the AllReduce cost
+~nothing; we must *hide* them instead).  This benchmark measures what each
+scheduling choice does, in one JSON (``results/comm_overlap.json``):
+
+* ``matrix`` — end-to-end distributed solves for every registered solver
+  crossed with {blocking, overlap} halo schedules over the stencil shapes:
+  iterations, wall clock per iteration, converged flag.  CG-family solvers
+  get the symmetric Poisson operator, BiCGStab-family the nonsymmetric one;
+  problem kind and tolerance follow ``solver_matrix.solver_problem_kind``
+  / ``solver_tol`` so the two sweeps stay like-for-like (only pipelined_cg
+  runs at its f32 attainable-accuracy floor, 1e-5 — see
+  ``core/solvers/pipelined.py``).
+* ``collectives`` — HLO totals for one whole jitted solve on a fake 2x2
+  fabric: AllReduce count (asserted: setup 1 + per-iteration count from
+  ``perfmodel.SOLVER_COMMS`` — exactly 1/iter for the pipelined solvers)
+  and collective-permute count (asserted: schedule-independent — overlap
+  changes *when* halos move, never how many messages).
+* ``model`` — ``perfmodel.predict_crossover`` on the paper's 608x608x1536
+  mesh: the fabric size where the pipelined single-reduction schedule
+  overtakes the 3-AllReduce fused schedule, and where overlap overtakes
+  blocking halos.
+
+Emits ``name,metric,value`` CSV rows (the benchmarks/run.py contract).
+``--smoke`` shrinks the matrix for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks._subproc import run_hlo_subprocess
+from benchmarks.solver_matrix import solver_problem_kind, solver_tol
+
+SHAPES = ("star7", "box27")
+SOLVE_SHAPE = (16, 16, 8)
+_SUBPROC_DEVICES = 4
+
+_COLLECTIVE_SNIPPET = """
+    import json
+    import jax, jax.numpy as jnp
+    from repro.core import bicgstab, precision, stencil
+    from repro.core.perfmodel import SOLVER_COMMS
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices({n})
+    shape = {shape}
+    cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape)
+    b = jnp.ones(shape, jnp.float32)
+    out = {{}}
+    for solver, comm in sorted(SOLVER_COMMS.items()):
+        counts = {{}}
+        for schedule in ("blocking", "overlap"):
+            f = lambda c, bb: bicgstab.solve_distributed(
+                mesh, c, bb, maxiter=8, policy=precision.F32,
+                solver=solver, schedule=schedule)
+            text = jax.jit(f).lower(cf, b).as_text()
+            n_ar = text.count("all_reduce") + text.count("all-reduce")
+            n_pp = (text.count("collective_permute")
+                    + text.count("collective-permute"))
+            counts[schedule] = {{"allreduce_total": n_ar, "ppermute_total": n_pp}}
+        # every solver folds its setup dots into ONE reduction; the rest
+        # is the loop body, emitted once in HLO
+        per_iter = counts["overlap"]["allreduce_total"] - 1
+        assert per_iter == comm.reductions_fused, (solver, per_iter)
+        assert (counts["overlap"]["ppermute_total"]
+                == counts["blocking"]["ppermute_total"]), (solver, counts)
+        counts["allreduce_per_iter"] = per_iter
+        out[solver] = counts
+    print(json.dumps(out))
+"""
+
+
+def measure_collectives(shape=SOLVE_SHAPE,
+                        n_devices: int = _SUBPROC_DEVICES) -> dict:
+    """Whole-solve HLO collective totals per {solver x schedule} on a fake
+    2x2 fabric (subprocess: the device count must precede jax init)."""
+    return run_hlo_subprocess(
+        _COLLECTIVE_SNIPPET.format(n=n_devices, shape=tuple(shape)),
+        n_devices)
+
+
+def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import bicgstab, precision, stencil
+    from repro.core.perfmodel import SOLVER_COMMS, predict_crossover
+    from repro.core.solvers import SOLVERS
+    from repro.launch.mesh import make_mesh_for_devices
+
+    mesh = make_mesh_for_devices()
+    shape = (12, 12, 8) if smoke else SOLVE_SHAPE
+    shapes = ("star7",) if smoke else SHAPES
+    solvers = (("bicgstab", "pipelined_bicgstab") if smoke
+               else tuple(sorted(SOLVERS)))
+    pol = precision.F32
+
+    cells = []
+    for name in shapes:
+        spec = stencil.get_spec(name)
+        x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+        for solver in solvers:
+            # shared problem-kind/tolerance rules with solver_matrix.py, so
+            # the two sweeps stay like-for-like comparable
+            problem = solver_problem_kind(solver)
+            if problem == "poisson":
+                cf = stencil.poisson(shape, spec=spec)
+            else:
+                cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0),
+                                                 shape, spec=spec)
+            b = stencil.rhs_for_solution(cf, x_true)
+            tol = solver_tol(solver)
+            for schedule in ("blocking", "overlap"):
+                solve = jax.jit(lambda c, bb, solver=solver, schedule=schedule:
+                                bicgstab.solve_distributed(
+                                    mesh, c, bb, tol=tol, maxiter=400,
+                                    policy=pol, solver=solver,
+                                    schedule=schedule))
+                res = solve(cf, b)
+                jax.block_until_ready(res.x)      # compile + warm
+                t0 = time.time()
+                res = solve(cf, b)
+                jax.block_until_ready(res.x)
+                wall = time.time() - t0
+                iters = int(res.iterations)
+                err = float(np.abs(np.asarray(res.x, np.float64)
+                                   - np.asarray(x_true, np.float64)).max())
+                cells.append({
+                    "stencil": name, "solver": solver, "schedule": schedule,
+                    "problem": problem,
+                    "problem_shape": list(shape), "tol": tol,
+                    "iterations": iters,
+                    "converged": bool(res.converged),
+                    "breakdown": bool(res.breakdown),
+                    "rel_residual": float(res.rel_residual),
+                    "max_err": err,
+                    "wall_s": wall,
+                    "us_per_iter": wall / max(iters, 1) * 1e6,
+                })
+
+    model = {
+        "mesh": [608, 608, 1536],
+        "pipelined_bicgstab_vs_bicgstab": predict_crossover(
+            (608, 608, 1536), {"solver": "bicgstab"},
+            {"solver": "pipelined_bicgstab"}),
+        "overlap_vs_blocking": predict_crossover(
+            (608, 608, 1536), {"schedule": "blocking"},
+            {"schedule": "overlap"}),
+    }
+
+    record = {
+        "generated_by": "benchmarks/comm_overlap.py",
+        "smoke": smoke,
+        "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
+        "solver_comms": {k: dataclass_dict(v)
+                         for k, v in sorted(SOLVER_COMMS.items())},
+        "matrix": cells,
+        "model": model,
+    }
+    if measure_hlo:
+        record["collectives"] = measure_collectives()
+        record["hlo_fabric_devices"] = _SUBPROC_DEVICES
+    return record
+
+
+def dataclass_dict(dc) -> dict:
+    import dataclasses
+    return dataclasses.asdict(dc)
+
+
+def run(*, smoke: bool = False) -> list[str]:
+    record = sweep(smoke=smoke)
+    os.makedirs("results", exist_ok=True)
+    path = os.path.join("results", "comm_overlap.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    rows = [f"comm_overlap,json_path,{path}"]
+    for c in record["matrix"]:
+        tag = f"{c['stencil']}_{c['solver']}_{c['schedule']}"
+        assert c["converged"], f"cell {tag} did not converge: {c}"
+        rows.append(f"comm_overlap,{tag}_iters,{c['iterations']}")
+        rows.append(f"comm_overlap,{tag}_us_per_iter,{c['us_per_iter']:.0f}")
+    if "collectives" in record:
+        for solver, counts in sorted(record["collectives"].items()):
+            rows.append(f"comm_overlap,{solver}_allreduce_per_iter,"
+                        f"{counts['allreduce_per_iter']}")
+    m = record["model"]
+    rows.append(f"comm_overlap,model_pipelined_crossover_chips,"
+                f"{m['pipelined_bicgstab_vs_bicgstab']['crossover_chips']}")
+    rows.append(f"comm_overlap,model_overlap_crossover_chips,"
+                f"{m['overlap_vs_blocking']['crossover_chips']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny matrix (CI): star7 + 2 solvers, minutes")
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row)

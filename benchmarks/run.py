@@ -18,10 +18,10 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single benchmark")
     args = ap.parse_args()
 
-    from benchmarks import (allreduce_model, cfd_step, iteration_time,
-                            precision_residual, roofline_report, simple_step,
-                            solver_matrix, stencil_family, strong_scaling,
-                            table1_opcounts)
+    from benchmarks import (allreduce_model, cfd_step, comm_overlap,
+                            iteration_time, precision_residual,
+                            roofline_report, simple_step, solver_matrix,
+                            stencil_family, strong_scaling, table1_opcounts)
 
     benches = {
         "table1_opcounts": table1_opcounts.run,
@@ -31,6 +31,7 @@ def main() -> None:
         "precision_residual": precision_residual.run,
         "stencil_family": stencil_family.run,
         "solver_matrix": solver_matrix.run,
+        "comm_overlap": comm_overlap.run,
         "simple_step": simple_step.run,
         "cfd_step": cfd_step.run,
         "strong_scaling": strong_scaling.run,
@@ -39,6 +40,7 @@ def main() -> None:
         benches.pop("strong_scaling")
         benches.pop("simple_step")
         benches["cfd_step"] = lambda: cfd_step.run(smoke=True)
+        benches["comm_overlap"] = lambda: comm_overlap.run(smoke=True)
     if args.only:
         benches = {args.only: benches[args.only]}
 

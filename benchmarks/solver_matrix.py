@@ -24,9 +24,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import subprocess
-import sys
-import textwrap
 import time
 
 MATRIX_SHAPES = ("star7", "star25", "box27")
@@ -61,17 +58,23 @@ _COLLECTIVE_SNIPPET = """
 
 def measure_collectives(shape, n_devices: int = _SUBPROC_DEVICES) -> dict:
     """Per-iteration HLO collective counts for both distributed backends."""
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.join(repo, "src")
-    code = textwrap.dedent(_COLLECTIVE_SNIPPET.format(n=n_devices,
-                                                      shape=tuple(shape)))
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    if out.returncode != 0:
-        raise RuntimeError(f"collective-count subprocess failed:\n{out.stderr}")
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    from benchmarks._subproc import run_hlo_subprocess
+
+    return run_hlo_subprocess(
+        _COLLECTIVE_SNIPPET.format(n=n_devices, shape=tuple(shape)),
+        n_devices)
+
+
+def solver_problem_kind(solver: str) -> str:
+    """CG-family solvers need the symmetric operator ("bicgstab" contains
+    "cg", so match exact names, not substrings)."""
+    return "poisson" if solver in ("cg", "pipelined_cg") else "random"
+
+
+def solver_tol(solver: str) -> float:
+    """pipelined_cg's w-recurrence bounds attainable f32 accuracy (see
+    core/solvers/pipelined.py); every other solver runs the tight default."""
+    return 1e-5 if solver == "pipelined_cg" else 1e-6
 
 
 def _solve_cell(mesh, cf, b, x_true, *, solver, backend, precond, tol,
@@ -121,7 +124,8 @@ def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
         x_true = jax.random.normal(jax.random.PRNGKey(1), matrix_shape,
                                    jnp.float32)
         for solver in sorted(SOLVERS):
-            if solver == "cg":
+            problem = solver_problem_kind(solver)
+            if problem == "poisson":
                 cf = stencil.poisson(matrix_shape, spec=spec)
             else:
                 cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0),
@@ -131,11 +135,12 @@ def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
                 for precond in ("none", "jacobi", "chebyshev"):
                     cell = _solve_cell(
                         mesh, cf, b, x_true, solver=solver, backend=backend,
-                        precond=precond, tol=1e-6, maxiter=400, policy=pol)
+                        precond=precond, tol=solver_tol(solver), maxiter=400,
+                        policy=pol)
                     cells.append({
                         "stencil": name, "solver": solver,
                         "backend": backend, "precond": precond,
-                        "problem": "poisson" if solver == "cg" else "random",
+                        "problem": problem,
                         "problem_shape": list(matrix_shape),
                         **cell,
                     })

@@ -21,9 +21,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
-import sys
-import textwrap
 import time
 
 SHAPES = ("star7", "star13", "star25", "box27")
@@ -69,17 +66,12 @@ def measure_collectives(shapes=SHAPES, n_devices: int = _SUBPROC_DEVICES,
     Runs in a subprocess because the fabric needs
     ``--xla_force_host_platform_device_count`` set before jax initializes.
     """
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = os.path.join(repo, "src")
-    code = textwrap.dedent(_COUNT_SNIPPET.format(
-        n=n_devices, shape=tuple(shape), shapes=tuple(shapes)))
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    if out.returncode != 0:
-        raise RuntimeError(f"collective-count subprocess failed:\n{out.stderr}")
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    from benchmarks._subproc import run_hlo_subprocess
+
+    return run_hlo_subprocess(
+        _COUNT_SNIPPET.format(n=n_devices, shape=tuple(shape),
+                              shapes=tuple(shapes)),
+        n_devices)
 
 
 def sweep(shapes=SHAPES, *, measure_hlo: bool = True) -> dict:

@@ -53,6 +53,14 @@ class SolverOptions:
     Jacobi preconditioning is the identity.  ``normalize=False`` hands the
     solver the *raw* rows with the stored ``aP`` diagonal — the case where
     ``precond="jacobi"`` does real work through the registry.
+
+    ``schedule`` is the halo communication schedule every inner solve's
+    operator is built with (``core.comm.SCHEDULES``; ``overlap`` hides the
+    exchange under the interior apply, bit-identically).  ``p_solver``
+    optionally routes the pressure-correction solve through a different
+    registry entry than the momentum solves — the pressure system is the
+    iteration-dominant one, so e.g. ``p_solver="pipelined_bicgstab"`` puts
+    the single-AllReduce schedule exactly where the sync points are.
     """
 
     solver: str = "bicgstab"
@@ -60,11 +68,17 @@ class SolverOptions:
     precond: str | PrecondConfig = "none"
     normalize: bool = True
     cheb_degree: int = 3
+    schedule: str = "overlap"
+    p_solver: str | None = None
 
     def precond_config(self) -> PrecondConfig:
         if isinstance(self.precond, PrecondConfig):
             return self.precond
         return PrecondConfig(name=self.precond, degree=self.cheb_degree)
+
+    @property
+    def pressure_solver(self) -> str:
+        return self.p_solver or self.solver
 
 
 def _reduce_names(fabric: FabricAxes) -> tuple[str, ...]:
@@ -101,13 +115,25 @@ def _system_coeffs(opts: SolverOptions, policy, system, b):
 
 
 def _inner_solve(cfg: CFDConfig, opts: SolverOptions, pconf: PrecondConfig,
-                 fabric: FabricAxes, system, b, x0, iters: int):
-    """One registry-routed inner solve; returns the f32 solution field."""
+                 fabric: FabricAxes, system, b, x0, iters: int,
+                 solver: str | None = None):
+    """One registry-routed inner solve; returns the f32 solution field.
+
+    ``solver`` overrides ``opts.solver`` (the pressure solve passes
+    ``opts.pressure_solver``)."""
     pol = cfg.policy
     cf, bs = _system_coeffs(opts, pol, system, b)
-    op = make_operator(opts.backend, cf, fabric, policy=pol)
+    # Pin the formation/solve boundary: without it XLA fuses formation
+    # arithmetic into the solver subgraph, and that fusion (FMA contraction
+    # included) depends on the comm schedule's apply structure — an
+    # ulp-level perturbation the Krylov loop amplifies.  With the barrier
+    # the solver sees materialized systems, so blocking and overlap
+    # schedules stay bit-identical through the whole SIMPLE iteration.
+    cf, bs, x0 = jax.lax.optimization_barrier((cf, bs, x0))
+    op = make_operator(opts.backend, cf, fabric, policy=pol,
+                       schedule=opts.schedule)
     M = build_precond(pconf, op)
-    res = get_solver(opts.solver)(
+    res = get_solver(solver or opts.solver)(
         op, bs, x0.astype(pol.storage), tol=cfg.inner_tol, maxiter=iters,
         policy=pol, precond=M)
     return res.x.astype(jnp.float32)
@@ -169,7 +195,7 @@ def _step_local(cfg: CFDConfig, opts: SolverOptions, pconf: PrecondConfig,
         cfg, du, dv, dup, dvp, div, gi, gj)
     p_corr = _inner_solve(cfg, opts, pconf, fabric,
                           (aPp, aEp, aWp, aNp, aSp), bp, jnp.zeros_like(p),
-                          cfg.inner_iters_p)
+                          cfg.inner_iters_p, solver=opts.pressure_solver)
 
     # ---- under-relaxed corrections ---------------------------------------
     pcp = gather_halo(p_corr, fabric, 1)
@@ -181,8 +207,17 @@ def _step_local(cfg: CFDConfig, opts: SolverOptions, pconf: PrecondConfig,
 
 
 def _validate(cfg: CFDConfig, opts: SolverOptions, mesh) -> None:
+    from repro.core.comm import SCHEDULES
+    from repro.core.solvers import SOLVERS
+
     if opts.backend not in BACKENDS:
         raise KeyError(f"unknown backend {opts.backend!r}; have {sorted(BACKENDS)}")
+    if opts.schedule not in SCHEDULES:
+        raise KeyError(f"unknown comm schedule {opts.schedule!r}; "
+                       f"have {sorted(SCHEDULES)}")
+    for s in (opts.solver, opts.pressure_solver):
+        if s not in SOLVERS:
+            raise KeyError(f"unknown solver {s!r}; have {sorted(SOLVERS)}")
     if opts.backend == "pallas":
         raise NotImplementedError(
             "the 2D CFD fields have no Pallas kernel yet; use backend='spmd' "

@@ -24,6 +24,8 @@ class CFDCell:
     normalize: bool = True          # False => raw aP rows (jacobi is real work)
     dt: float | None = None         # None => steady
     n_steps: int = 0                # transient steps when dt is set
+    schedule: str = "overlap"       # halo schedule (core.comm.SCHEDULES)
+    p_solver: str | None = None     # pressure-solve override (default: solver)
 
 
 CFD_CELLS = {
@@ -41,6 +43,12 @@ CFD_CELLS = {
     # inflow/outflow channel toward the developed profile
     "channel_develop": CFDCell("channel_develop", "channel", n=24,
                                reynolds=50.0, dt=0.05, n_steps=80),
+    # communication-lean cavity: overlapped halos in every inner SpMV and
+    # the single-AllReduce pipelined solver on the (iteration-dominant)
+    # pressure-correction system
+    "cavity_pipelined": CFDCell("cavity_pipelined", "cavity", n=32,
+                                reynolds=100.0, schedule="overlap",
+                                p_solver="pipelined_bicgstab"),
     "smoke": CFDCell("smoke", "cavity", n=12, reynolds=100.0),
 }
 
@@ -53,7 +61,8 @@ def build(cell: CFDCell):
     cfg = CFDConfig(n=cell.n, reynolds=cell.reynolds, scenario=cell.scenario,
                     policy=get_policy(cell.policy))
     opts = SolverOptions(solver=cell.solver, backend=cell.backend,
-                         precond=cell.precond, normalize=cell.normalize)
+                         precond=cell.precond, normalize=cell.normalize,
+                         schedule=cell.schedule, p_solver=cell.p_solver)
     tcfg = (TransientConfig(dt=cell.dt, n_steps=cell.n_steps)
             if cell.dt is not None else None)
     return cfg, opts, tcfg

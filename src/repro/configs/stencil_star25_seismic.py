@@ -35,6 +35,7 @@ class StencilFamilyCell:
     backend: str = "spmd"                # key into core.operator.BACKENDS
     precond: str = "none"                # core.precond.PRECONDS
     cheb_degree: int = 3                 # when precond == "chebyshev"
+    schedule: str = "overlap"            # core.comm.SCHEDULES
 
 
 SEISMIC_CELLS = {
@@ -47,6 +48,11 @@ SEISMIC_CELLS = {
     # iterations at the cost of local-only polynomial SpMVs
     "rtm_chip_cheb": StencilFamilyCell("rtm_chip_cheb", (96, 96, 352),
                                        "star25", precond="chebyshev"),
+    # latency-lean variant for the large fabric: deep halos overlapped
+    # under the wide star's interior, one AllReduce per iteration
+    "rtm_n1008_pipelined": StencilFamilyCell(
+        "rtm_n1008_pipelined", (1008, 1008, 352), "star25",
+        solver="pipelined_bicgstab", schedule="overlap"),
 }
 
 

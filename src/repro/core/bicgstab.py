@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.comm import SCHEDULES, get_schedule  # noqa: F401
 from repro.core.halo import FabricAxes
 from repro.core.operator import BACKENDS, make_operator  # noqa: F401
 from repro.core.precision import Policy, F32, MIXED
@@ -60,13 +61,16 @@ def solve_ref(
     solver: str = "bicgstab",
     backend: str = "reference",
     precond: str | PrecondConfig | None = None,
+    schedule: str | None = None,
 ) -> SolveResult:
     """Single-device oracle solve (used by tests and small examples).
 
     ``backend="pallas"`` runs the same solve through the fused kernels on a
     1x1 fabric (all collectives degenerate) — the single-block fused path.
+    ``schedule`` picks the comm schedule for the distributed backends
+    (degenerate here, but the apply structure is exercised).
     """
-    op = make_operator(backend, coeffs, policy=policy)
+    op = make_operator(backend, coeffs, policy=policy, schedule=schedule)
     M = build_precond(get_precond_config(precond), op)
     return get_solver(solver)(
         op, b, x0, tol=tol, maxiter=maxiter, policy=policy,
@@ -97,7 +101,7 @@ def solve_ref_fused(
     """
     from repro.compat import resolve_interpret
     from repro.kernels.fused_iter import update_p, update_xr_dots
-    from repro.kernels.stencil7.fused import stencil7_dot, stencil7_two_dots
+    from repro.kernels.stencil_nd.fused import stencil7_dot, stencil7_two_dots
 
     interpret = resolve_interpret(interpret)
     x = jnp.zeros_like(b)
@@ -140,7 +144,8 @@ def solve_distributed(
     maxiter: int = 200,
     policy: Policy = MIXED,
     fused_reductions: bool = True,
-    overlap_halo: bool = True,
+    overlap_halo: bool | None = None,
+    schedule: str | None = None,
     record_history: bool = False,
     solver: str = "bicgstab",
     backend: str = "spmd",
@@ -152,14 +157,21 @@ def solve_distributed(
 
     The fabric sees exactly the paper's traffic: one bidirectional face
     exchange per mesh axis per SpMV and 3 (fused) or 5 (paper-faithful
-    separate) scalar AllReduces per BiCGStab iteration — with
-    ``backend="pallas"`` the local work additionally runs as the fused
+    separate) scalar AllReduces per BiCGStab iteration — 1 with the
+    pipelined solvers (``solver="pipelined_bicgstab"/"pipelined_cg"``).
+    With ``backend="pallas"`` the local work additionally runs as the fused
     stencil + vector-update Pallas kernels.
+
+    ``schedule`` ("blocking" | "overlap", ``core.comm.SCHEDULES``) picks
+    the halo schedule — ``overlap`` issues the ppermutes first and hides
+    them under the interior apply, bit-identical to ``blocking``.  The
+    legacy ``overlap_halo`` boolean spells the same choice and loses ties.
 
     ``precond`` ("none" | "jacobi" | "chebyshev" | a PrecondConfig) applies
     on the right, so the collective schedule is unchanged.  ``apply_impl``
     is the legacy hook swapping the local SpMV for a custom kernel.
     """
+    sched = get_schedule(schedule if schedule is not None else overlap_halo)
     fabric = FabricAxes.from_mesh(mesh)
     if backend == "reference" and mesh.devices.size > 1:
         # the reference backend has no halo exchange and local-only dots:
@@ -177,11 +189,11 @@ def solve_distributed(
     def solve_fn(cf_local, b_local, x0_local):
         op = make_operator(
             backend, cf_local, fabric, policy=policy,
-            overlap=overlap_halo, fused_reductions=fused_reductions,
+            schedule=sched, fused_reductions=fused_reductions,
             interpret=interpret)
         if apply_impl is not None:
             op = op.with_apply(lambda v: apply_impl(
-                op.coeffs, v, fabric, policy=policy, overlap=overlap_halo))
+                op.coeffs, v, fabric, policy=policy, overlap=sched.overlap_halo))
         M = build_precond(pconf, op)
         return solver_fn(op, b_local, x0_local, tol=tol, maxiter=maxiter,
                          policy=policy, record_history=record_history,
@@ -211,7 +223,8 @@ def make_iteration_fn(
     *,
     policy: Policy = MIXED,
     fused_reductions: bool = True,
-    overlap_halo: bool = True,
+    overlap_halo: bool | None = None,
+    schedule: str | None = None,
     backend: str = "spmd",
     interpret: bool | None = None,
     apply_impl: Callable | None = None,
@@ -228,6 +241,7 @@ def make_iteration_fn(
     """
     from repro.core.solvers.common import safe_div
 
+    sched = get_schedule(schedule if schedule is not None else overlap_halo)
     fabric = FabricAxes.from_mesh(mesh)
     if backend == "reference" and mesh.devices.size > 1:
         raise ValueError(
@@ -237,11 +251,11 @@ def make_iteration_fn(
     def iteration(cf, x, r, p, r0, rho):
         op = make_operator(
             backend, cf, fabric, policy=policy,
-            overlap=overlap_halo, fused_reductions=fused_reductions,
+            schedule=sched, fused_reductions=fused_reductions,
             interpret=interpret)
         if apply_impl is not None:
             op = op.with_apply(lambda v: apply_impl(
-                op.coeffs, v, fabric, policy=policy, overlap=overlap_halo))
+                op.coeffs, v, fabric, policy=policy, overlap=sched.overlap_halo))
         axpy, axpy2 = _axpys(policy)
         if op.fused is not None:
             f = op.fused

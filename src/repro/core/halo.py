@@ -173,7 +173,8 @@ def padded_apply(
     """u = A v from an r-padded local block (halos already in place).
 
     ``region`` restricts the computation to a sub-box of the local block —
-    used by the overlap path to recompute only the halo-dependent shell.
+    used by the overlap schedule to recompute only the halo-dependent
+    boundary ring (``core.comm.boundary_ring_apply``).
     """
     spec = coeffs.spec
     c = policy.compute
@@ -184,8 +185,22 @@ def padded_apply(
         u = center
     else:
         u = coeffs.diag[reg].astype(c) * center
-    for name, cf in coeffs.diags.items():
+    for name, cf in coeffs.ordered_items():   # canonical order — see StencilCoeffs
         u = u + cf[reg].astype(c) * sub(name_offset(name, len(shape)))
+    return u
+
+
+def interior_apply(coeffs: StencilCoeffs, v: jax.Array, *,
+                   policy: Policy = F32) -> jax.Array:
+    """Zero-Dirichlet local apply in compute dtype — reads nothing a
+    collective produced, so it is the work the overlap schedule runs while
+    the halo faces are in flight.  Correct everywhere except the depth-r
+    boundary ring bordering a split axis (patched afterwards)."""
+    c = policy.compute
+    vc = v.astype(c)
+    u = vc if coeffs.diag is None else coeffs.diag.astype(c) * vc
+    for name, cf in coeffs.ordered_items():   # canonical order — see StencilCoeffs
+        u = u + cf.astype(c) * _shift_nd(vc, name_offset(name, v.ndim))
     return u
 
 
@@ -195,60 +210,49 @@ def local_apply(
     fabric: FabricAxes,
     *,
     policy: Policy = F32,
-    overlap: bool = True,
+    overlap: bool | None = None,
+    schedule=None,
 ) -> jax.Array:
     """Local shard of u = A v with depth-r halo exchange.  Runs inside
     shard_map and handles every spec in the stencil family (the halo depth,
     and whether corners are exchanged, derive from the coefficient names).
 
-    ``overlap=False`` is the paper-faithful streaming form: every term reads
-    the fully assembled halo'd block (the analogue of the CS-1 fabric streams
-    feeding multiply threads).
+    The communication schedule is pluggable (``core.comm.SCHEDULES``):
 
-    ``overlap=True`` is the TPU-native form: the zero-Dirichlet local apply
-    (pure local compute, no collective dependency) runs first, and only the
-    depth-r shell bordering a split axis is overwritten with halo-correct
-    values — the collective-permutes have a minimal dependent region, so the
-    scheduler can hide them under the interior work.
+    * ``blocking`` is the paper-faithful streaming form: every term reads
+      the fully assembled halo'd block (the analogue of the CS-1 fabric
+      streams feeding multiply threads).
+    * ``overlap`` (default) issues the halo ``ppermute``s first, computes
+      the interior while the faces are in flight, and patches only the
+      depth-r boundary ring — bit-identical to blocking, with a minimal
+      collective-dependent region for the latency-hiding scheduler.
+
+    ``overlap=True/False`` is the legacy boolean spelling of the same
+    choice; ``schedule`` (a name or :class:`~repro.core.comm.CommSchedule`)
+    wins when both are given.
     """
-    spec = coeffs.spec
-    r = spec.radius
-    c = policy.compute
-    vp = gather_halo(v, fabric, r, corners=spec.needs_corners)
+    from repro.core.comm import get_schedule, scheduled_apply
 
-    if not overlap:
-        return padded_apply(coeffs, vp, v.shape, policy=policy).astype(policy.storage)
-
-    # interior: zero-Dirichlet local apply, no collective dependency
-    vc = v.astype(c)
-    u = vc if coeffs.diag is None else coeffs.diag.astype(c) * vc
-    for name, cf in coeffs.diags.items():
-        u = u + cf.astype(c) * _shift_nd(vc, name_offset(name, v.ndim))
-    # shell: overwrite the depth-r slabs that needed halo values (slabs of
-    # different axes overlap at edges/corners; set() is idempotent there)
-    for axis, name, n in fabric.split_info(v.ndim):
-        if name is None or n == 1:
-            continue
-        for side_sl in (slice(0, r), slice(v.shape[axis] - r, None)):
-            reg = tuple(side_sl if i == axis else slice(None) for i in range(v.ndim))
-            u = u.at[reg].set(padded_apply(coeffs, vp, v.shape,
-                                           policy=policy, region=reg))
-    return u.astype(policy.storage)
+    sched = get_schedule(schedule if schedule is not None else overlap)
+    return scheduled_apply(coeffs, v, fabric, policy=policy, schedule=sched)
 
 
 # Reductions (paper §IV-3: AllReduce for the BiCGStab inner products) live
 # with the operator backends — ``core.operator._make_reductions`` builds the
-# fused (one psum per sync point) / separate (one psum per dot) schedules.
+# fused (one psum per sync point) / separate (one psum per dot) schedules;
+# the pipelined solvers (core/solvers/pipelined.py) take the schedule down
+# to one AllReduce per iteration.
 
 
 def global_apply(mesh, coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32,
-                 overlap: bool = True) -> jax.Array:
+                 overlap: bool | None = None, schedule=None) -> jax.Array:
     """Convenience wrapper: one distributed SpMV on global arrays."""
     fabric = FabricAxes.from_mesh(mesh)
     spec = fabric.spec(v.ndim)
 
     def fn(cf, vv):
-        return local_apply(cf, vv, fabric, policy=policy, overlap=overlap)
+        return local_apply(cf, vv, fabric, policy=policy, overlap=overlap,
+                           schedule=schedule)
 
     from repro.compat import shard_map
     return shard_map(fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec,

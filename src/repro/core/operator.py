@@ -37,7 +37,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.halo import FabricAxes, local_apply
+from repro.core.comm import CommSchedule, OVERLAP, get_schedule, scheduled_apply
+from repro.core.halo import FabricAxes
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import local_dots
 from repro.core.stencil import StencilCoeffs, apply_ref
@@ -60,7 +61,14 @@ class FusedOps:
 
 @dataclasses.dataclass(frozen=True)
 class LinearOperator:
-    """A shard-local view of ``A`` plus its reduction schedule."""
+    """A shard-local view of ``A`` plus its communication schedule.
+
+    ``schedule`` is the halo-side :class:`~repro.core.comm.CommSchedule`
+    the ``apply`` was built with (blocking vs overlapped exchange); the
+    reduction side lives in ``dots``/``reduce_partials`` (fused vs separate
+    psums) and, one level up, in the solver's recurrence structure (the
+    pipelined variants fuse every sync point into one AllReduce).
+    """
 
     name: str
     coeffs: StencilCoeffs
@@ -70,6 +78,7 @@ class LinearOperator:
     reduce_partials: Callable
     reduce_max: Callable
     fused: FusedOps | None = None
+    schedule: CommSchedule = OVERLAP
 
     @property
     def spec(self):
@@ -121,8 +130,12 @@ def _make_reductions(names: tuple[str, ...], fused_reductions: bool):
 
 
 def reference_operator(coeffs: StencilCoeffs, *, policy: Policy = F32,
-                       **_unused) -> LinearOperator:
-    """Single-address-space oracle: dense-shift apply, local reductions."""
+                       schedule=None, **_unused) -> LinearOperator:
+    """Single-address-space oracle: dense-shift apply, local reductions.
+
+    There is no communication to schedule; ``schedule`` is validated and
+    recorded so driver plumbing treats every backend uniformly.
+    """
     cf = coeffs.astype(policy.storage)
     return LinearOperator(
         name="reference", coeffs=cf, policy=policy,
@@ -130,28 +143,38 @@ def reference_operator(coeffs: StencilCoeffs, *, policy: Policy = F32,
         dots=local_dots,
         reduce_partials=_identity_reduce,
         reduce_max=lambda x: x,
+        schedule=get_schedule(schedule),
     )
 
 
 def spmd_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
-                  policy: Policy = F32, overlap: bool = True,
-                  fused_reductions: bool = True, **_unused) -> LinearOperator:
-    """Halo-overlap SPMD backend (the paper's scheme; runs inside shard_map)."""
+                  policy: Policy = F32, overlap: bool | None = None,
+                  schedule=None, fused_reductions: bool = True,
+                  **_unused) -> LinearOperator:
+    """Halo-exchange SPMD backend (the paper's scheme; runs inside shard_map).
+
+    ``schedule`` picks the halo schedule (``core.comm.SCHEDULES``); the
+    legacy ``overlap`` boolean spells the same choice and loses ties.
+    """
     fabric = fabric or FabricAxes()
     cf = coeffs.astype(policy.storage)
+    sched = get_schedule(schedule if schedule is not None else overlap)
     dots, reduce_partials, reduce_max = _make_reductions(
         _fabric_axis_names(fabric), fused_reductions)
     return LinearOperator(
         name="spmd", coeffs=cf, policy=policy,
-        apply=lambda v: local_apply(cf, v, fabric, policy=policy, overlap=overlap),
+        apply=lambda v: scheduled_apply(cf, v, fabric, policy=policy,
+                                        schedule=sched),
         dots=dots,
         reduce_partials=reduce_partials,
         reduce_max=reduce_max,
+        schedule=sched,
     )
 
 
 def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
-                    policy: Policy = F32, fused_reductions: bool = True,
+                    policy: Policy = F32, overlap: bool | None = None,
+                    schedule=None, fused_reductions: bool = True,
                     interpret: bool | None = None, **_unused) -> LinearOperator:
     """Pallas-fused backend: halo exchange + fused stencil kernel for the
     SpMV, ``kernels/fused_iter`` passes for the vector updates and dot
@@ -166,13 +189,14 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
 
     fabric = fabric or FabricAxes()
     cf = coeffs.astype(policy.storage)
+    sched = get_schedule(schedule if schedule is not None else overlap)
     it = resolve_interpret(interpret)
     _dots, reduce_partials, reduce_max = _make_reductions(
         _fabric_axis_names(fabric), fused_reductions)
 
     cf_unit = StencilCoeffs(cf.diags)  # the kernel's unit-diagonal contract
     base_apply = lambda v: pallas_local_apply(cf_unit, v, fabric, policy=policy,
-                                              interpret=it)
+                                              schedule=sched, interpret=it)
     if cf.diag is None:
         apply = base_apply
     else:
@@ -193,6 +217,7 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
             [dot_partial(a, b) for a, b in pairs]),
         reduce_partials=reduce_partials,
         reduce_max=reduce_max,
+        schedule=sched,
         fused=FusedOps(
             dot_partial=dot_partial,
             update_q_dots=lambda alpha, r, s, y: update_q_dots(

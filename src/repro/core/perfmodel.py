@@ -14,12 +14,22 @@ diameter-bound latency.  On TPU the same three terms are:
                  + n_reductions * allreduce_latency(mesh)
 
 and the iteration is bound by max(compute, memory) + collective (halos can
-overlap interior compute; the blocking reductions cannot — the paper's
-explicit design choice, §IV-3).
+overlap interior compute under ``schedule="overlap"``; the blocking
+reductions cannot — the paper's explicit design choice, §IV-3).
+
+Communication-schedule extension: the model is parameterized over the
+solver's collective structure (:data:`SOLVER_COMMS`) and the halo schedule
+(``blocking`` exposes the full halo time; ``overlap`` only the fraction the
+interior cannot hide).  The pipelined solvers trade 2 (CG) or 3 (BiCGStab)
+reduction latencies per iteration for one, at the price of extra memory
+sweeps — :func:`predict_crossover` locates the fabric size where that
+trade wins, which ``benchmarks/allreduce_model.py`` and
+``benchmarks/comm_overlap.py`` report against measured schedules.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 PEAK_FLOPS = 197e12
@@ -28,6 +38,36 @@ LINK_BW = 50e9
 HOP_LATENCY_S = 1e-6          # per-hop ICI latency (~us class)
 FLOPS_PER_PT = 44.0
 WORDS_PER_PT = 42.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverComm:
+    """Per-iteration communication/traffic structure of a registered solver.
+
+    ``words_per_pt`` follows the §IV accounting style: SpMV sweeps read the
+    coefficient diagonals + iterate and write the result (8 words each for
+    star7), each AXPY-class update reads/writes 3 words, each dot reads 2.
+    """
+
+    n_spmv: int                  # SpMVs (= halo exchanges) per iteration
+    reductions_fused: int        # AllReduces per iteration, fused schedule
+    reductions_separate: int     # ... one psum per dot (paper-faithful)
+    words_per_pt: float          # HBM words per meshpoint per iteration
+
+
+#: solver name (core.solvers.SOLVERS) -> its collective structure.
+SOLVER_COMMS = {
+    # 2 SpMV (16) + 6 AXPY (18) + 4 dot reads (8) = 42 (§IV's 10-vector set)
+    "bicgstab": SolverComm(2, 3, 5, 42.0),
+    # 2 SpMV (16) + 9 AXPY (27) + 12 dot reads (24) = 67: the memory price
+    # of the single-reduction reformulation (carried A-images z, t)
+    "pipelined_bicgstab": SolverComm(2, 1, 12, 67.0),
+    # 1 SpMV (8) + 3 AXPY (9) + 2 dot reads (4) = 21
+    "cg": SolverComm(1, 2, 3, 21.0),
+    # 1 SpMV (8) + 6 AXPY (18) + 2 dot reads (4) = 30 (Ghysels-Vanroose
+    # z/s/p recurrence triple)
+    "pipelined_cg": SolverComm(1, 1, 2, 30.0),
+}
 
 
 def allreduce_latency(px: int, py: int, pz: int = 1) -> float:
@@ -40,43 +80,85 @@ def allreduce_latency(px: int, py: int, pz: int = 1) -> float:
 def iteration_time_model(mesh_shape, chips: int, *, itemsize: int = 2,
                          fused_reductions: bool = True,
                          fused_sweeps: bool = False,
+                         solver: str = "bicgstab",
+                         schedule: str = "overlap",
                          pods: int = 1) -> dict:
-    """Predicted BiCGStab iteration time for an X*Y*Z mesh on `chips` chips.
+    """Predicted Krylov iteration time for an X*Y*Z mesh on `chips` chips.
 
-    ``fused_sweeps`` models the Pallas fused-iteration kernels (words/pt 42
-    -> 28: SpMV+dot and AXPY+dot single passes, see kernels/fused_iter).
+    ``solver`` selects the per-iteration collective structure from
+    :data:`SOLVER_COMMS`; ``schedule`` chooses whether the halo transfers
+    hide under the interior apply (``overlap``) or serialize before it
+    (``blocking``).  ``fused_sweeps`` models the Pallas fused-iteration
+    kernels (BiCGStab words/pt 42 -> 28: SpMV+dot and AXPY+dot single
+    passes, see kernels/fused_iter).
     """
+    comm = SOLVER_COMMS[solver]
     X, Y, Z = mesh_shape
     per_pod = chips // pods
     px = py = int(math.sqrt(per_pod))
     pts_chip = X * Y * Z / chips
-    words = 28.0 if fused_sweeps else WORDS_PER_PT
+    words = comm.words_per_pt
+    if fused_sweeps and solver == "bicgstab":
+        words = 28.0
 
     t_comp = FLOPS_PER_PT * pts_chip / PEAK_FLOPS
     t_mem = words * itemsize * pts_chip / HBM_BW
 
-    # halos: 2 SpMVs x 4 faces of (block_y*Z or block_x*Z) + pod Z-faces
+    # halos: n_spmv x 4 faces of (block_y*Z or block_x*Z) + pod Z-faces
     bx, by = X / px, Y / py
     face_words = 2 * ((bx + by) * (Z / pods)) * 2  # both directions, per spmv
     if pods > 1:
         face_words += 2 * (bx * by) * 2
-    t_halo = 2 * face_words * itemsize / LINK_BW
-    n_red = 3 if fused_reductions else 5
+    t_halo = comm.n_spmv * face_words * itemsize / LINK_BW
+    n_red = comm.reductions_fused if fused_reductions else comm.reductions_separate
     t_red = n_red * allreduce_latency(px, py, pods)
 
-    # halos overlap interior compute (overlap=True path); only the fraction
-    # the interior cannot hide is exposed
     t_interior = max(t_comp, t_mem)
-    t_halo_exposed = max(0.0, t_halo - t_interior)
+    if schedule == "overlap":
+        # halos hide under the interior apply; only the excess is exposed
+        t_halo_exposed = max(0.0, t_halo - t_interior)
+    elif schedule == "blocking":
+        t_halo_exposed = t_halo
+    else:
+        raise KeyError(f"unknown schedule {schedule!r}; "
+                       f"have ['blocking', 'overlap']")
     t_iter = t_interior + t_red + t_halo_exposed
     return {
         "t_compute_s": t_comp,
         "t_memory_s": t_mem,
         "t_halo_s": t_halo,
+        "t_halo_exposed_s": t_halo_exposed,
         "t_reduce_s": t_red,
         "t_iter_s": t_iter,
+        "n_reductions": n_red,
         "bound": "memory" if t_mem >= t_comp else "compute",
     }
+
+
+def predict_crossover(mesh_shape, base: dict, alt: dict,
+                      chip_counts=(4, 16, 64, 256, 1024, 4096, 16384, 65536),
+                      **common) -> dict:
+    """First fabric size where model config ``alt`` beats ``base``.
+
+    ``base``/``alt`` are keyword overrides for :func:`iteration_time_model`
+    (e.g. ``{"solver": "bicgstab"}`` vs ``{"solver": "pipelined_bicgstab"}``
+    or ``{"schedule": "blocking"}`` vs ``{"schedule": "overlap"}``); the
+    scan reports both predicted iteration times per chip count and the
+    smallest count where the alternative is faster — the schedule-choice
+    guidance ``benchmarks/comm_overlap.py`` publishes.
+    """
+    rows = []
+    crossover = None
+    for chips in chip_counts:
+        t_base = iteration_time_model(mesh_shape, chips, **common, **base)
+        t_alt = iteration_time_model(mesh_shape, chips, **common, **alt)
+        rows.append({"chips": chips,
+                     "t_base_s": t_base["t_iter_s"],
+                     "t_alt_s": t_alt["t_iter_s"]})
+        if crossover is None and t_alt["t_iter_s"] < t_base["t_iter_s"]:
+            crossover = chips
+    return {"base": base, "alt": alt, "mesh_shape": list(mesh_shape),
+            "rows": rows, "crossover_chips": crossover}
 
 
 def mfix_timesteps_per_second(mesh_shape, chips: int, *,

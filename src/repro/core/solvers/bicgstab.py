@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import (
-    SolveResult, axpy_family, finish, run_krylov, safe_div,
+    SolveResult, axpy_family, convergence_test, finish, run_krylov, safe_div,
 )
 
 
@@ -66,8 +66,8 @@ def bicgstab_loop(
         x0 = x0.astype(policy.storage)
         r0 = axpy(jnp.float32(-1.0), apply_A(x0), b)
 
-    (bnorm2,) = dots([(b, b)], policy)
-    (rho0,) = dots([(r0, r0)], policy)
+    bnorm2, rho0 = dots([(b, b), (r0, r0)], policy)  # one setup sync point
+    converged = convergence_test(tol, bnorm2)
 
     def step(carry):
         i, x, r, p, rho, res2, conv, brk = carry
@@ -85,13 +85,13 @@ def bicgstab_loop(
         alpha_frac, bad4 = safe_div(alpha, omega)
         beta = beta_frac * alpha_frac
         p = axpy(beta, axpy(-omega, s, p), r_new)
-        conv = res2_new <= (tol * tol) * bnorm2
+        conv = converged(res2_new)
         brk = bad1 | bad2 | bad3 | bad4
         return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
 
     init = (
         jnp.int32(0), x0, r0, r0, rho0, rho0,
-        rho0 <= (tol * tol) * bnorm2, jnp.bool_(False),
+        converged(rho0), jnp.bool_(False),
     )
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
@@ -137,6 +137,7 @@ def bicgstab_fused_loop(
 
     bnorm2, rho0 = op.reduce_partials(
         [f.dot_partial(b, b), f.dot_partial(r0, r0)])  # one setup AllReduce
+    converged = convergence_test(tol, bnorm2)
 
     def step(carry):
         i, x, r, p, rho, res2, conv, brk = carry
@@ -153,13 +154,13 @@ def bicgstab_fused_loop(
         beta_frac, bad3 = safe_div(rho_new, rho)
         alpha_frac, bad4 = safe_div(alpha, omega)
         p = f.update_p(beta_frac * alpha_frac, omega, r_new, p, s)
-        conv = res2_new <= (tol * tol) * bnorm2
+        conv = converged(res2_new)
         brk = bad1 | bad2 | bad3 | bad4
         return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
 
     init = (
         jnp.int32(0), x0, r0, r0, rho0, rho0,
-        rho0 <= (tol * tol) * bnorm2, jnp.bool_(False),
+        converged(rho0), jnp.bool_(False),
     )
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)

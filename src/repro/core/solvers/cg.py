@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import (
-    SolveResult, axpy_family, finish, run_krylov, safe_div,
+    SolveResult, axpy_family, convergence_test, finish, run_krylov, safe_div,
 )
 
 
@@ -44,8 +44,8 @@ def cg_loop(
     else:
         x = x0.astype(policy.storage)
         r = axpy(jnp.float32(-1.0), apply_A(x), b)
-    (bnorm2,) = dots([(b, b)], policy)
-    (rho0,) = dots([(r, r)], policy)
+    bnorm2, rho0 = dots([(b, b), (r, r)], policy)  # one setup sync point
+    converged = convergence_test(tol, bnorm2)
 
     def step(carry):
         i, x, r, p, rho, conv, brk = carry
@@ -57,11 +57,11 @@ def cg_loop(
         (rho_new,) = dots([(r, r)], policy)
         beta, bad2 = safe_div(rho_new, rho)
         p = axpy(beta, p, r)
-        conv = rho_new <= (tol * tol) * bnorm2
+        conv = converged(rho_new)
         return i + 1, x, r, p, rho_new, conv, brk | bad1 | bad2
 
     init = (jnp.int32(0), x, r, r, rho0,
-            rho0 <= (tol * tol) * bnorm2, jnp.bool_(False))
+            converged(rho0), jnp.bool_(False))
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
     return finish(final, bnorm2, history=hist)

@@ -38,6 +38,22 @@ class SolveResult:
 EPS = 1e-30
 
 
+def convergence_test(tol: float, bnorm2):
+    """The uniform relative-residual predicate: ``res2 <= tol^2 * ||b||^2``.
+
+    Every Krylov loop (generic and pipelined alike) tests its squared
+    recurrence residual against the same threshold; sharing the closure
+    keeps the convergence semantics identical across the registry instead
+    of each loop re-deriving ``tol*tol*bnorm2`` inline.
+    """
+    thresh = jnp.float32(tol) * jnp.float32(tol) * bnorm2
+
+    def converged(res2):
+        return res2 <= thresh
+
+    return converged
+
+
 def safe_div(num, den):
     """num/den plus a breakdown flag when the denominator vanished."""
     ok = jnp.abs(den) > EPS

@@ -225,6 +225,17 @@ class StencilCoeffs:
         """name -> neighbor offset for every stored diagonal."""
         return {n: name_offset(n, self.ndim) for n in self.diags}
 
+    def ordered_items(self) -> list[tuple[str, jax.Array]]:
+        """(name, coefficient) pairs in the spec's canonical offset order.
+
+        Pytree boundaries re-sort the ``diags`` dict, so its iteration
+        order is not stable.  Every apply path (``apply_ref``, the halo
+        interior/padded applies, the Pallas kernel's argument order)
+        accumulates terms in THIS order — the single invariant behind the
+        cross-schedule bitwise-identity guarantee of ``core/comm.py``.
+        """
+        return [(n, self.diags[n]) for n in self.spec.names if n in self.diags]
+
     def astype(self, dtype) -> "StencilCoeffs":
         return StencilCoeffs(
             {k: v.astype(dtype) for k, v in self.diags.items()},
@@ -294,13 +305,17 @@ def apply_ref(coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32) -> j
     paper's arithmetic: products and accumulating adds run in
     ``policy.compute`` (Table I counts these as half precision in the mixed
     policy); the unit diagonal contributes ``v`` directly.
+
+    Terms accumulate in the canonical order of ``coeffs.ordered_items()``
+    — the same order every distributed apply path and the Pallas kernel
+    use, which keeps the backends bit-comparable.
     """
     c = policy.compute
     if coeffs.diag is None:
         u = v.astype(c)
     else:
         u = coeffs.diag.astype(c) * v.astype(c)
-    for name, cf in coeffs.diags.items():
+    for name, cf in coeffs.ordered_items():
         off = name_offset(name, v.ndim)
         u = u + cf.astype(c) * _shift_nd(v, off).astype(c)
     return u.astype(policy.storage)

@@ -1,5 +1,5 @@
-"""SpMV with fused inner-product epilogues — the remaining pieces of the
-fused-iteration schedule (EXPERIMENTS.md §Perf, stencil v3).
+"""7-point SpMV with fused inner-product epilogues — the remaining pieces
+of the fused-iteration schedule (EXPERIMENTS.md §Perf, stencil v3).
 
 Two variants used by the BiCGStab iteration:
   * ``stencil7_dot``      : s = A p  and  <r0, s>       (sync point 1 feed)
@@ -10,6 +10,10 @@ freshly written vector (and of the second operand), cutting the iteration's
 per-point traffic from 42 to 31 words (see kernels/fused_iter for the AXPY
 fusions).  Dots accumulate in f32 across sequential grid steps (paper FMAC
 discipline).
+
+This module is the one radius-1-star specialization left in the package:
+the dot epilogues are only wired for the paper's 7-point shape (the
+``kernels/stencil7`` shim re-exports them under their historical home).
 """
 
 from __future__ import annotations
@@ -21,8 +25,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.compat import HAS_PL_ELEMENT, resolve_interpret
-from repro.core.stencil import StencilCoeffs
-from repro.kernels.stencil7.ops import ORDER, pick_zc
+from repro.core.stencil import STAR7, StencilCoeffs
+from repro.kernels.stencil_nd.ops import pick_zc
+
+# kernel argument order (== STAR7.names: xp, xm, yp, ym, zp, zm)
+ORDER = STAR7.names
 
 
 def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,

@@ -61,21 +61,26 @@ def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
                              interpret=interpret)
 
 
-def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
-                       interpret: bool | None = None):
-    """Drop-in for halo.local_apply: depth-r halo exchange + fused kernel.
+def pallas_local_apply(coeffs, v, fabric, *, policy, overlap: bool | None = None,
+                       schedule=None, interpret: bool | None = None):
+    """Drop-in for halo.local_apply: depth-r halo exchange + fused kernel,
+    under either communication schedule (``core.comm.SCHEDULES``).
 
-    ``gather_halo`` assembles the (bx+2r, by+2r, Z+2r) block (slab
-    ``ppermute`` per split axis, corner-carrying sequential exchange for box
-    specs), which is exactly the kernel's input layout — the kernel then
-    computes the whole product in one fused pass, no boundary patching.
-    ``overlap`` is accepted for signature compatibility; scheduling overlap
-    inside a single fused kernel is the Mosaic pipeline's job.
+    ``blocking``: ``gather_halo`` assembles the (bx+2r, by+2r, Z+2r) block
+    (slab ``ppermute`` per split axis, corner-carrying sequential exchange
+    for box specs), which is exactly the kernel's input layout — the kernel
+    computes the whole product in one fused pass.
+
+    ``overlap`` (default): the exchange is issued first, the kernel runs on
+    the *zero-padded* block — the interior apply, which depends on no
+    collective — and only the depth-r boundary ring is patched from the
+    exchanged block.  The patch re-runs the same Pallas kernel on the ring
+    slabs (not a jnp re-derivation, whose fusion can differ by an ulp), so
+    the result is bit-identical to blocking.
     """
-    from repro.core.halo import gather_halo
+    from repro.core import comm
     from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
 
-    del overlap
     if coeffs.diag is not None:
         raise NotImplementedError(
             "the fused stencil kernel assumes the family's unit diagonal; "
@@ -86,10 +91,35 @@ def pallas_local_apply(coeffs, v, fabric, *, policy, overlap=True,
     r = spec.radius
     cf = coeffs.astype(policy.storage)
     vs = v.astype(policy.storage)
-    vp = gather_halo(vs, fabric, r, corners=spec.needs_corners)
-    bx, by, Z = v.shape
-    zc = pick_zc(bx, by, Z, jnp.dtype(vs.dtype).itemsize,
-                 radius=r, n_coeffs=spec.n_offsets)
-    return stencil_nd_pallas(vp, _spec_order(cf, spec), spec.offsets,
-                             radius=r, zc=zc, accum_dtype=policy.compute,
-                             interpret=interpret)
+    itemsize = jnp.dtype(vs.dtype).itemsize
+    cf_list = _spec_order(cf, spec)
+
+    def kernel(vp):
+        bx, by, Z = (s - 2 * r for s in vp.shape)
+        zc = pick_zc(bx, by, Z, itemsize, radius=r, n_coeffs=spec.n_offsets)
+        return stencil_nd_pallas(vp, cf_list, spec.offsets, radius=r, zc=zc,
+                                 accum_dtype=policy.compute,
+                                 interpret=interpret)
+
+    def patch_ring(exchange, u):
+        # re-run the same kernel on the exchanged ring slabs (not a jnp
+        # re-derivation, whose fusion can differ by an ulp from the kernel)
+        for reg in comm.boundary_regions(v.shape, fabric, r):
+            lo_hi = [(sl.start or 0, v.shape[i] if sl.stop is None else sl.stop)
+                     for i, sl in enumerate(reg)]
+            sub_vp = exchange.padded[tuple(slice(lo, hi + 2 * r)
+                                           for lo, hi in lo_hi)]
+            patch = stencil_nd_pallas(
+                sub_vp, [c[reg] for c in cf_list], spec.offsets, radius=r,
+                zc=pick_zc(*(hi - lo for lo, hi in lo_hi), itemsize,
+                           radius=r, n_coeffs=spec.n_offsets),
+                accum_dtype=policy.compute, interpret=interpret)
+            u = u.at[reg].set(patch)
+        return u
+
+    return comm.scheduled_apply(
+        cf, vs, fabric, policy=policy,
+        schedule=schedule if schedule is not None else overlap,
+        full_fn=kernel,
+        interior_fn=lambda vv: kernel(jnp.pad(vv, r)),
+        patch_fn=patch_ring)

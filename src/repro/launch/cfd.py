@@ -4,6 +4,7 @@
     PYTHONPATH=src python -m repro.launch.cfd --scenario cavity --raw-coeffs --precond jacobi
     PYTHONPATH=src python -m repro.launch.cfd --scenario channel --dt 0.05 --steps 40 \\
         --checkpoint-dir /tmp/cfd_ckpt
+    PYTHONPATH=src python -m repro.launch.cfd --p-solver pipelined_bicgstab --schedule overlap
 
 Steady mode runs the lid-driven cavity (or channel) SIMPLE loop to
 convergence and, for the Re=100 cavity, verifies the Ghia et al. (1982)
@@ -30,6 +31,7 @@ from repro.apps.cfd import (
     solve_steady, to_staggered,
 )
 from repro.core import precision
+from repro.core.comm import SCHEDULES
 from repro.core.precond import PRECONDS
 from repro.core.solvers import SOLVERS
 from repro.launch.mesh import make_mesh_for_devices
@@ -57,10 +59,17 @@ def main() -> None:
     ap.add_argument("--re", type=float, default=100.0, help="Reynolds number")
     ap.add_argument("--u-in", type=float, default=1.0, help="channel inflow velocity")
     ap.add_argument("--solver", default="bicgstab", choices=sorted(SOLVERS))
+    ap.add_argument("--p-solver", default=None, choices=sorted(SOLVERS),
+                    help="route the pressure-correction solve through a "
+                         "different solver (e.g. pipelined_bicgstab: 1 "
+                         "AllReduce per inner iteration); default: --solver")
     ap.add_argument("--backend", default="spmd",
                     choices=["reference", "spmd"],
                     help="operator backend for the inner solves (spmd runs "
                          "the whole SIMPLE iteration inside shard_map)")
+    ap.add_argument("--schedule", default="overlap", choices=sorted(SCHEDULES),
+                    help="halo communication schedule for the inner-solve "
+                         "SpMVs (overlap is bit-identical to blocking)")
     ap.add_argument("--precond", default="none", choices=sorted(PRECONDS))
     ap.add_argument("--cheb-degree", type=int, default=3)
     ap.add_argument("--policy", default="f32", choices=sorted(precision.POLICIES))
@@ -90,12 +99,15 @@ def main() -> None:
                     policy=pol)
     opts = SolverOptions(solver=args.solver, backend=args.backend,
                          precond=args.precond, cheb_degree=args.cheb_degree,
-                         normalize=not args.raw_coeffs)
+                         normalize=not args.raw_coeffs,
+                         schedule=args.schedule, p_solver=args.p_solver)
     mesh = make_mesh_for_devices() if args.backend != "reference" else None
     fab = dict(mesh.shape) if mesh is not None else {"local": 1}
     print(f"SIMPLE {args.scenario} n={args.n} Re={args.re:g} on fabric {fab} "
-          f"solver={args.solver} backend={args.backend} precond={args.precond} "
-          f"policy={pol.name} rows={'raw' if args.raw_coeffs else 'unit-diagonal'}")
+          f"solver={args.solver} p_solver={opts.pressure_solver} "
+          f"backend={args.backend} schedule={args.schedule} "
+          f"precond={args.precond} policy={pol.name} "
+          f"rows={'raw' if args.raw_coeffs else 'unit-diagonal'}")
     if args.precond == "jacobi" and not args.raw_coeffs:
         print("note: unit-diagonal rows make jacobi the identity (the paper's "
               "pre-normalization); use --raw-coeffs for real Jacobi work")

@@ -6,6 +6,7 @@ whole stencil family and the full solver x backend x preconditioner matrix.
     PYTHONPATH=src python -m repro.launch.solve --solver cg --problem poisson
     PYTHONPATH=src python -m repro.launch.solve --precond chebyshev --problem poisson
     PYTHONPATH=src python -m repro.launch.solve --backend pallas --mesh 16 16 8
+    PYTHONPATH=src python -m repro.launch.solve --solver pipelined_bicgstab --schedule overlap
 
 Builds a diagonally-dominant system with the requested stencil shape
 (``star7`` is the paper's 7-point MFIX class; ``star25`` the high-order
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bicgstab, precision, stencil
+from repro.core.comm import SCHEDULES
 from repro.core.operator import BACKENDS
 from repro.core.precond import PRECONDS, PrecondConfig
 from repro.core.solvers import SOLVERS
@@ -38,7 +40,7 @@ def build_problem(args, spec: stencil.StencilSpec):
     key = jax.random.PRNGKey(0)
     problem = args.problem
     if problem is None:  # shape-appropriate default
-        if args.solver == "cg":
+        if args.solver in ("cg", "pipelined_cg"):
             problem = "poisson"      # CG wants a symmetric operator
         elif spec == stencil.STAR7:
             problem = "convdiff"
@@ -72,10 +74,16 @@ def main() -> None:
                     help="stencil shape: star7 (paper), star13, star25 "
                          "(seismic RTM), box27")
     ap.add_argument("--solver", default="bicgstab", choices=sorted(SOLVERS),
-                    help="Krylov solver (bicgstab: the paper's; cg: symmetric)")
+                    help="Krylov solver (bicgstab: the paper's; cg: symmetric; "
+                         "pipelined_*: single-reduction variants, 1 fused "
+                         "AllReduce/iter)")
     ap.add_argument("--backend", default="spmd", choices=sorted(BACKENDS),
                     help="SpMV backend: spmd (halo local_apply), pallas "
                          "(fused kernels + 3 AllReduces/iter), reference")
+    ap.add_argument("--schedule", default="overlap", choices=sorted(SCHEDULES),
+                    help="communication schedule: overlap hides the halo "
+                         "ppermutes under the interior apply (bit-identical "
+                         "to blocking)")
     ap.add_argument("--precond", default="none", choices=sorted(PRECONDS),
                     help="right preconditioner (local — the collective "
                          "schedule is unchanged)")
@@ -111,7 +119,7 @@ def main() -> None:
     print(f"problem {problem}/{spec.name} (radius {spec.radius}, "
           f"{spec.n_points} points) {shape} on fabric {dict(mesh.shape)} "
           f"solver={args.solver} backend={args.backend} "
-          f"precond={args.precond} policy={pol.name}")
+          f"schedule={args.schedule} precond={args.precond} policy={pol.name}")
 
     x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
     b = stencil.rhs_for_solution(cf, x_true)
@@ -135,6 +143,7 @@ def main() -> None:
     res = bicgstab.solve_distributed(
         mesh, cf, b.astype(pol.storage), tol=args.tol, maxiter=args.maxiter,
         policy=pol, solver=args.solver, backend=args.backend, precond=pconf,
+        schedule=args.schedule,
         fused_reductions=not args.paper_separate_reductions)
     jax.block_until_ready(res.x)
     dt = time.time() - t0

@@ -10,8 +10,7 @@ from _hyp import given, settings, st
 from repro.core import stencil
 from repro.kernels import fused_iter as fi
 from repro.kernels.fused_iter import ref as R
-from repro.kernels.stencil7 import stencil7_apply, stencil7_ref
-from repro.kernels.stencil7.ops import ORDER
+from repro.kernels.stencil7 import ORDER, stencil7_apply, stencil7_ref
 
 
 def _tol(dtype):
@@ -41,7 +40,7 @@ def test_stencil7_kernel_matches_core_apply():
 
 def test_stencil7_zc_chunking_equivalence():
     """Different VMEM chunkings must give identical results."""
-    from repro.kernels.stencil7.kernel import stencil7_pallas
+    from repro.kernels.stencil7 import stencil7_pallas
     shape = (4, 5, 32)
     cf = stencil.random_nonsymmetric(jax.random.PRNGKey(4), shape)
     v = jax.random.normal(jax.random.PRNGKey(5), shape, jnp.float32)
@@ -154,7 +153,7 @@ def test_pallas_solver_integration():
 @pytest.mark.parametrize("shape", [(4, 4, 8), (5, 6, 16), (3, 3, 4)])
 def test_stencil7_dot_epilogue(shape):
     """Fused SpMV + <r0, s> epilogue (§Perf v3 schedule) vs oracles."""
-    from repro.kernels.stencil7.fused import stencil7_dot, stencil7_two_dots
+    from repro.kernels.stencil_nd.fused import stencil7_dot, stencil7_two_dots
     cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape)
     p = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
     r0 = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32)
@@ -173,7 +172,7 @@ def test_pallas_local_apply_in_distributed_solver(subproc):
     subproc("""
         import functools, jax, jax.numpy as jnp, numpy as np
         from repro.core import stencil, bicgstab, precision
-        from repro.kernels.stencil7.ops import pallas_local_apply
+        from repro.kernels.stencil7 import pallas_local_apply
         from repro.launch.mesh import make_mesh_for_devices
         mesh = make_mesh_for_devices(4)
         shape = (8, 8, 8)

@@ -1,5 +1,7 @@
-"""Operator-layer tests: the three backends are interchangeable, and the
-Pallas-fused backend keeps the 3-AllReduce schedule end to end."""
+"""Operator-layer tests: the three backends are interchangeable, the
+Pallas-fused backend keeps the 3-AllReduce schedule end to end, and the
+comm-scheduling layer (blocking vs overlap halo exchange) is bit-identical
+with an unchanged collective count."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import precision, stencil
+from repro.core.comm import SCHEDULES, get_schedule
 from repro.core.operator import BACKENDS, make_operator
 
 
@@ -20,6 +23,19 @@ def test_registry_contents():
     assert set(BACKENDS) == {"reference", "spmd", "pallas"}
     with pytest.raises(KeyError, match="unknown backend"):
         make_operator("cuda", stencil.poisson((4, 4, 4)))
+
+
+def test_schedule_registry_and_operator_carry():
+    assert set(SCHEDULES) == {"blocking", "overlap"}
+    assert get_schedule(None).name == "overlap"        # default
+    assert get_schedule(False).name == "blocking"      # legacy bool spelling
+    assert get_schedule(True).name == "overlap"
+    with pytest.raises(KeyError, match="unknown comm schedule"):
+        get_schedule("eager")
+    cf = stencil.poisson((4, 4, 4))
+    for backend in sorted(BACKENDS):
+        op = make_operator(backend, cf, schedule="blocking")
+        assert op.schedule.name == "blocking", backend
 
 
 @pytest.mark.parametrize("backend", ["reference", "spmd", "pallas"])
@@ -45,6 +61,84 @@ def test_pallas_backend_raw_diag_correction():
     op = make_operator("pallas", cf, policy=precision.F32)
     np.testing.assert_allclose(np.asarray(op.apply(v)), np.asarray(u_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_overlap_apply_bit_identical_and_same_ppermutes(subproc):
+    """Acceptance (ISSUE 5): on a 2x2 fabric the overlap schedule's apply is
+    bit-identical to blocking for both distributed backends across the
+    stencil family, and lowers to exactly the same collective-permute count
+    — overlap changes *when* halos move, never how many messages."""
+    subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import shard_map
+        from repro.core import precision, stencil
+        from repro.core.halo import FabricAxes, global_apply
+        from repro.core.operator import make_operator
+        from repro.launch.mesh import make_mesh_for_devices
+        mesh = make_mesh_for_devices(4)      # 2x2 fabric
+        fabric = FabricAxes.from_mesh(mesh)
+        pspec = fabric.spec(3)
+        for name in ('star7', 'star25', 'box27'):
+            spec = stencil.get_spec(name)
+            shape = (16, 16, 6) if name == 'star25' else (8, 8, 6)
+            cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape,
+                                             spec=spec)
+            v = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+            u_ref = stencil.apply_ref(cf, v)
+            # spmd: bitwise + collective-permute parity from lowered HLO
+            outs, pp = {}, {}
+            for schedule in ('blocking', 'overlap'):
+                f = jax.jit(lambda c, vv, s=schedule: global_apply(
+                    mesh, c, vv, schedule=s))
+                outs[schedule] = np.asarray(f(cf, v))
+                text = f.lower(cf, v).as_text()
+                pp[schedule] = (text.count('collective_permute')
+                                + text.count('collective-permute'))
+            assert np.array_equal(outs['blocking'], outs['overlap']), name
+            assert pp['blocking'] == pp['overlap'] > 0, (name, pp)
+            np.testing.assert_allclose(outs['overlap'], np.asarray(u_ref),
+                                       rtol=1e-5, atol=1e-5, err_msg=name)
+            # pallas: interior through the fused kernel, ring re-run through
+            # the same kernel on the exchanged slabs — still bitwise
+            pouts = {}
+            for schedule in ('blocking', 'overlap'):
+                def f(c, vv, s=schedule):
+                    op = make_operator('pallas', c, fabric,
+                                       policy=precision.F32, schedule=s)
+                    return op.apply(vv)
+                pouts[schedule] = np.asarray(shard_map(
+                    f, mesh=mesh, in_specs=(pspec, pspec), out_specs=pspec,
+                    check_vma=False)(cf, v))
+            assert np.array_equal(pouts['blocking'], pouts['overlap']), name
+            np.testing.assert_allclose(pouts['overlap'], np.asarray(u_ref),
+                                       rtol=1e-5, atol=1e-5, err_msg=name)
+        print('OK')
+    """, n_devices=4)
+
+
+def test_overlap_solve_bit_identical(subproc):
+    """Whole distributed solves are bit-identical across halo schedules
+    (mixed precision included)."""
+    subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import bicgstab, precision, stencil
+        from repro.launch.mesh import make_mesh_for_devices
+        mesh = make_mesh_for_devices(4)
+        shape = (8, 8, 6)
+        cf = stencil.random_nonsymmetric(jax.random.PRNGKey(0), shape)
+        b = stencil.rhs_for_solution(
+            cf, jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32))
+        for policy, bb in ((precision.F32, b),
+                           (precision.MIXED, b.astype(jnp.bfloat16))):
+            xs = {}
+            for schedule in ('blocking', 'overlap'):
+                res = bicgstab.solve_distributed(
+                    mesh, cf, bb, tol=1e-6, maxiter=40, policy=policy,
+                    schedule=schedule)
+                xs[schedule] = np.asarray(res.x, np.float32)
+            assert np.array_equal(xs['blocking'], xs['overlap']), policy.name
+        print('OK')
+    """, n_devices=4)
 
 
 @pytest.mark.slow

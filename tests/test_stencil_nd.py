@@ -60,14 +60,24 @@ def test_zc_chunking_equivalence(specname):
 
 
 def test_stencil7_alias_is_generic_kernel():
-    """kernels.stencil7 must be a re-export of the r=1 star specialization."""
+    """kernels.stencil7 must be a one-file deprecation shim re-exporting the
+    r=1 star specialization of stencil_nd (satellite: the old package's
+    kernel/ops/ref bodies are gone)."""
     from repro.kernels import stencil7, stencil_nd
+    assert stencil7.__file__.endswith("stencil7.py")   # module, not package
+    for name in ("stencil7_apply", "stencil7_ref", "stencil7_pallas",
+                 "pallas_local_apply", "stencil7_dot", "stencil7_two_dots",
+                 "ORDER", "pick_zc", "VMEM_BUDGET_BYTES"):
+        assert hasattr(stencil7, name), name          # legacy surface intact
     shape = (4, 4, 8)
     cf = stencil.random_nonsymmetric(jax.random.PRNGKey(6), shape)
     v = jax.random.normal(jax.random.PRNGKey(7), shape, jnp.float32)
     u7 = stencil7.stencil7_apply(cf, v)
     und = stencil_nd.stencil_apply(cf, v, spec=stencil.STAR7)
     np.testing.assert_allclose(np.asarray(u7), np.asarray(und), rtol=0, atol=0)
+    u_ref = stencil7.stencil7_ref(v, [cf.diags[n] for n in stencil7.ORDER])
+    np.testing.assert_allclose(np.asarray(u7), np.asarray(u_ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_pick_zc_budget_scales_with_radius():
