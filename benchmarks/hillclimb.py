@@ -138,6 +138,39 @@ def long_variants():
     _save("long_v2_weightsdata", v2)
 
 
+def run() -> list[str]:
+    """benchmarks.run entry: the stencil hillclimb cells as CSV rows.
+
+    Runs in a subprocess because the 512-device XLA_FLAGS fake fabric must
+    be set before jax initializes — this module does that at import time,
+    which is too late once benchmarks.run has imported jax.
+    """
+    import subprocess
+    import sys
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=512",
+               PYTHONPATH="src")
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.hillclimb", "--cell", "stencil"],
+        check=True, env=env, capture_output=True, text=True)
+
+    rows = []
+    out = "results/hillclimb"
+    for fn in sorted(os.listdir(out)):
+        if not (fn.startswith("stencil_") and fn.endswith(".json")):
+            continue
+        with open(os.path.join(out, fn)) as f:
+            rec = json.load(f)
+        variant = rec.get("variant", fn[:-5])
+        for k in ("t_memory_s", "t_collective_s", "t_bound_s"):
+            if rec.get(k) is not None:
+                rows.append(f"hillclimb,{variant}_{k},{rec[k]:.3e}")
+        if rec.get("words_per_pt") is not None:
+            rows.append(f"hillclimb,{variant}_words_per_pt,{rec['words_per_pt']}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=["stencil", "moe", "long", "all"],

@@ -19,9 +19,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (allreduce_model, cfd_step, comm_overlap,
-                            iteration_time, precision_residual,
-                            roofline_report, simple_step, solver_matrix,
-                            stencil_family, strong_scaling, table1_opcounts)
+                            hillclimb, iteration_time, kernel_autotune,
+                            precision_residual, roofline_report, simple_step,
+                            solver_matrix, stencil_family, strong_scaling,
+                            table1_opcounts)
 
     benches = {
         "table1_opcounts": table1_opcounts.run,
@@ -32,6 +33,8 @@ def main() -> None:
         "stencil_family": stencil_family.run,
         "solver_matrix": solver_matrix.run,
         "comm_overlap": comm_overlap.run,
+        "kernel_autotune": kernel_autotune.run,
+        "hillclimb": hillclimb.run,
         "simple_step": simple_step.run,
         "cfd_step": cfd_step.run,
         "strong_scaling": strong_scaling.run,
@@ -39,8 +42,10 @@ def main() -> None:
     if args.fast:
         benches.pop("strong_scaling")
         benches.pop("simple_step")
+        benches.pop("hillclimb")  # subprocess re-lowers the full cell matrix
         benches["cfd_step"] = lambda: cfd_step.run(smoke=True)
         benches["comm_overlap"] = lambda: comm_overlap.run(smoke=True)
+        benches["kernel_autotune"] = lambda: kernel_autotune.run(smoke=True)
     if args.only:
         benches = {args.only: benches[args.only]}
 

@@ -36,6 +36,9 @@ class StencilFamilyCell:
     precond: str = "none"                # core.precond.PRECONDS
     cheb_degree: int = 3                 # when precond == "chebyshev"
     schedule: str = "overlap"            # core.comm.SCHEDULES
+    autotune: bool = False               # launch.solve --autotune: sweep the
+    #                                      pallas kernel cell on first run,
+    #                                      then serve from the tuning cache
 
 
 SEISMIC_CELLS = {
@@ -53,6 +56,11 @@ SEISMIC_CELLS = {
     "rtm_n1008_pipelined": StencilFamilyCell(
         "rtm_n1008_pipelined", (1008, 1008, 352), "star25",
         solver="pipelined_bicgstab", schedule="overlap"),
+    # the autotuned Pallas-backend variant: block shapes + ring-epilogue
+    # choice come from the persistent tuning cache (swept on first run)
+    "rtm_chip_tuned": StencilFamilyCell("rtm_chip_tuned", (96, 96, 352),
+                                        "star25", backend="pallas",
+                                        autotune=True),
 }
 
 

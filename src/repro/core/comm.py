@@ -156,12 +156,12 @@ def scheduled_apply(coeffs: StencilCoeffs, v: jax.Array, fabric: FabricAxes, *,
                     policy: Policy = F32,
                     schedule: CommSchedule | str | None = None,
                     full_fn=None, interior_fn=None,
-                    patch_fn=None) -> jax.Array:
+                    patch_fn=None, fused_fn=None) -> jax.Array:
     """u = A v on the local shard under the given communication schedule.
 
     This is the one place the schedule's structure lives; backends
-    customize only *how* each piece computes, via three hooks that default
-    to the pure-jnp shifted-window applies:
+    customize only *how* each piece computes, via hooks that default to
+    the pure-jnp shifted-window applies:
 
     * ``full_fn(vp) -> u`` — the blocking apply over the assembled halo'd
       block (the Pallas backend passes its fused kernel);
@@ -171,11 +171,21 @@ def scheduled_apply(coeffs: StencilCoeffs, v: jax.Array, fabric: FabricAxes, *,
     * ``patch_fn(exchange, u) -> u`` — overwrite the depth-r boundary ring
       from the exchanged block, already cast to the output dtype (Pallas:
       the kernel re-run on the ring slabs, so overlap stays bit-identical
-      to its blocking path).
+      to its blocking path);
+    * ``fused_fn(exchange) -> u`` — the fused boundary-ring epilogue: one
+      pass that computes interior *and* ring from the in-flight exchange
+      (Pallas: a single kernel launch instead of interior + patches).
+      When given, it replaces the interior/patch pair entirely — the
+      exchange is still issued first, so the latency-hiding scheduler can
+      run independent work (AXPYs, the preconditioner's local sweeps)
+      under the transfers even though the SpMV itself now waits on them.
+      Selected per-cell by the tuning cache where the autotune sweep says
+      it wins (``kernels/stencil_nd/fused.py``).
 
     For bit-identity across schedules a backend's hooks must accumulate
     terms in the same canonical order (``StencilCoeffs.ordered_items``) as
-    each other — the defaults and the Pallas kernel all do.
+    each other — the defaults and the Pallas kernel all do, for every
+    epilogue form.
     """
     spec = coeffs.spec
     r = spec.radius
@@ -189,6 +199,8 @@ def scheduled_apply(coeffs: StencilCoeffs, v: jax.Array, fabric: FabricAxes, *,
                             policy=policy).astype(policy.storage)
 
     exchange = start_halo_exchange(v, fabric, r, corners=spec.needs_corners)
+    if fused_fn is not None:
+        return fused_fn(exchange)
     if interior_fn is None:
         u = interior_apply(coeffs, v, policy=policy)
     else:

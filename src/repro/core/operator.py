@@ -175,11 +175,18 @@ def spmd_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
 def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
                     policy: Policy = F32, overlap: bool | None = None,
                     schedule=None, fused_reductions: bool = True,
-                    interpret: bool | None = None, **_unused) -> LinearOperator:
+                    interpret: bool | None = None,
+                    fuse_ring: bool | None = None, **_unused) -> LinearOperator:
     """Pallas-fused backend: halo exchange + fused stencil kernel for the
     SpMV, ``kernels/fused_iter`` passes for the vector updates and dot
     partials.  Runs inside shard_map; one BiCGStab iteration lowers to
     fused kernels + 3 AllReduces end to end.
+
+    Kernel tile shapes resolve through the persistent tuning cache
+    (``core/tuning``) at trace time, so a swept {spec x dtype x local
+    shape} cell transparently gets its tuned config.  ``fuse_ring``
+    overrides the cache's boundary-ring epilogue choice for the overlap
+    schedule (None = let the cache decide).
     """
     from repro.compat import resolve_interpret
     from repro.kernels.fused_iter import (
@@ -196,7 +203,8 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
 
     cf_unit = StencilCoeffs(cf.diags)  # the kernel's unit-diagonal contract
     base_apply = lambda v: pallas_local_apply(cf_unit, v, fabric, policy=policy,
-                                              schedule=sched, interpret=it)
+                                              schedule=sched, interpret=it,
+                                              fuse_ring=fuse_ring)
     if cf.diag is None:
         apply = base_apply
     else:

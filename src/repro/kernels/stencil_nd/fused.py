@@ -1,7 +1,20 @@
-"""7-point SpMV with fused inner-product epilogues — the remaining pieces
-of the fused-iteration schedule (EXPERIMENTS.md §Perf, stencil v3).
+"""Fused kernel epilogues: the boundary-ring fold for the overlap
+schedule, and the 7-point SpMV inner-product epilogues (EXPERIMENTS.md
+§Perf, stencil v3).
 
-Two variants used by the BiCGStab iteration:
+**Boundary-ring epilogue** (:func:`fused_ring_apply`): the overlap
+schedule's split form pays one interior kernel launch plus one patch
+launch per boundary region; the fused form folds the ring into the
+interior kernel's own pass — one launch per overlapped SpMV.  Selection is
+per-cell via the tuning cache (``KernelConfig.fuse_ring``), because the
+fold is a genuine trade: it removes the extra launches and the ring
+re-reads, but the single pass now reads the *exchanged* block, so the
+whole kernel depends on the halo collectives instead of only the depth-r
+ring — on fabrics where halo latency is fully hidden anyway (the paper's
+regime) fusion wins; where the interior must cover the transfers the split
+form wins.  The sweep decides.
+
+**Dot epilogues**: two variants used by the BiCGStab iteration:
   * ``stencil7_dot``      : s = A p  and  <r0, s>       (sync point 1 feed)
   * ``stencil7_two_dots`` : y = A q  and  <q, y>, <y, y> (sync point 2 feed)
 
@@ -11,9 +24,9 @@ per-point traffic from 42 to 31 words (see kernels/fused_iter for the AXPY
 fusions).  Dots accumulate in f32 across sequential grid steps (paper FMAC
 discipline).
 
-This module is the one radius-1-star specialization left in the package:
-the dot epilogues are only wired for the paper's 7-point shape (the
-``kernels/stencil7`` shim re-exports them under their historical home).
+The dot epilogues are the one radius-1-star specialization left in the
+package (the ``kernels/stencil7`` shim re-exports them under their
+historical home); the ring epilogue is generic over the stencil family.
 """
 
 from __future__ import annotations
@@ -30,6 +43,31 @@ from repro.kernels.stencil_nd.ops import pick_zc
 
 # kernel argument order (== STAR7.names: xp, xm, yp, ym, zp, zm)
 ORDER = STAR7.names
+
+
+def fused_ring_apply(exchange, cf_list: list[jax.Array], spec, config, *,
+                     accum_dtype=jnp.float32,
+                     interpret: bool | None = None) -> jax.Array:
+    """One-launch overlapped SpMV: interior + boundary ring in one pass.
+
+    Runs the fused stencil kernel once over the *exchanged* r-padded block.
+    Bitwise identity with the split interior+ring form follows from the
+    kernel's per-element contract: a non-ring cell never reads halo values,
+    so its sum is unchanged between the zero-padded and exchanged inputs;
+    a ring cell computes exactly the canonical-order sum the split form's
+    patch kernel computes from the same exchanged slabs.  Tiling cannot
+    break this — each output element is an independent canonical-order
+    accumulation, whatever the grid decomposition (asserted bitwise across
+    schedules and epilogues in tests/test_tuning.py).
+
+    Launch accounting: this is 1 pallas_call per SpMV where the split form
+    traces 1 + (patch launches per split boundary region).
+    """
+    from repro.kernels.stencil_nd.ops import tile_apply
+
+    assert exchange.radius == spec.radius, (exchange.radius, spec.radius)
+    return tile_apply(exchange.padded, cf_list, spec, config,
+                      accum_dtype=accum_dtype, interpret=interpret)
 
 
 def _kernel(vp_ref, w_ref, xp_ref, xm_ref, yp_ref, ym_ref, zp_ref, zm_ref,

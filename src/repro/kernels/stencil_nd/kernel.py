@@ -8,17 +8,26 @@ statically shifted (r,r,r)-halo'd window of that block, and the accumulated
 result streams back — one read of v, one read of each coefficient diagonal,
 one write of u, for 7, 13, 25 or 27 points alike.
 
-Tiling follows stencil7: the fabric-local block is (bx, by, Z); Z is split
-into ``zc`` chunks (grid dimension) so arbitrary Z fits VMEM.  With
-element-indexed BlockSpecs (``pl.Element``) consecutive grid steps read
-overlapping (zc+2r)-windows of the z-padded iterate — the in-VMEM analogue
-of the paper's loopback channel, now r planes deep.  On jax versions
-without ``pl.Element`` the padded iterate stays fully resident and the
-window is cut with ``lax.dynamic_slice`` inside the kernel body instead
-(see repro.compat.HAS_PL_ELEMENT).
+Tiling is the kernel's tuning space (``core/tuning.KernelConfig``): the
+fabric-local block is cut into a ``(bxc, byc, zc)`` tile grid.  The paper's
+layout is the degenerate full-block tile with Z split into chunks so
+arbitrary Z fits VMEM; the autotuner (``benchmarks/kernel_autotune.py``)
+sweeps the x/y tiles and Z-split factors per {spec x dtype x local shape}
+and persists winners to the tuning cache.  With element-indexed BlockSpecs
+(``pl.Element``) consecutive grid steps read overlapping halo'd windows of
+the padded iterate — the in-VMEM analogue of the paper's loopback channel,
+r planes deep.  On jax versions without ``pl.Element`` the padded iterate
+stays fully resident and the window is cut with ``lax.dynamic_slice``
+inside the kernel body instead (see repro.compat.HAS_PL_ELEMENT) — the
+``resident`` VMEM choice the tuner also sweeps where both forms exist.
 
-VMEM per step ~= (bx+2r)(by+2r)(zc+2r) + (n_offsets+1)*bx*by*zc halfwords;
-the ops wrapper picks zc to stay under the budget.
+Tile shapes that do not evenly divide the local block (e.g. the paper's
+unpadded 600 x 595 tiles) are clamped at trace time to the nearest valid
+divisors with a warning — never left to surface as a cryptic Pallas
+BlockSpec error.
+
+VMEM per step ~= (bxc+2r)(byc+2r)(zc+2r) + (n_offsets+1)*bxc*byc*zc
+halfwords; the ops wrapper picks the chunking to stay under the budget.
 """
 
 from __future__ import annotations
@@ -31,20 +40,32 @@ from jax.experimental import pallas as pl
 
 from repro.compat import HAS_PL_ELEMENT
 
+# Count of pallas_call ops traced for the stencil SpMV — the kernel-launch
+# accounting behind the fused boundary-ring epilogue's 2 -> 1 claim (each
+# traced call is one kernel op in the lowered program).  Tests snapshot it
+# around a traced apply; see tests/test_tuning.py.
+_TRACED_CALLS = 0
 
-def _kernel(vp_ref, *refs, offsets, radius, block, zc, accum_dtype, resident):
+
+def traced_call_count() -> int:
+    """Total stencil pallas_call ops traced so far in this process."""
+    return _TRACED_CALLS
+
+
+def _kernel(vp_ref, *refs, offsets, radius, tile, accum_dtype, resident):
     cf_refs, u_ref = refs[:-1], refs[-1]
-    bx, by, _ = block
+    bxc, byc, zc = tile
     r = radius
     vp = vp_ref[...]
     if resident:
-        # whole padded array resident: cut this step's z-window by hand
-        i = pl.program_id(0)
+        # whole padded array resident: cut this step's tile window by hand
+        i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
         vp = jax.lax.dynamic_slice(
-            vp, (0, 0, i * zc), (bx + 2 * r, by + 2 * r, zc + 2 * r))
+            vp, (i * bxc, j * byc, k * zc),
+            (bxc + 2 * r, byc + 2 * r, zc + 2 * r))
     c = lambda a: a.astype(accum_dtype)
-    win = lambda off: vp[r + off[0]:r + off[0] + bx,
-                         r + off[1]:r + off[1] + by,
+    win = lambda off: vp[r + off[0]:r + off[0] + bxc,
+                         r + off[1]:r + off[1] + byc,
                          r + off[2]:r + off[2] + zc]
     u = c(win((0, 0, 0)))        # unit main diagonal (Jacobi preconditioned)
     for cf_ref, off in zip(cf_refs, offsets):
@@ -52,9 +73,29 @@ def _kernel(vp_ref, *refs, offsets, radius, block, zc, accum_dtype, resident):
     u_ref[...] = u.astype(u_ref.dtype)
 
 
+def _valid_tile(block: tuple[int, int] | None, zc: int,
+                shape: tuple[int, int, int]) -> tuple[int, int, int]:
+    """Trace-time tile validation: clamp to the nearest valid divisors.
+
+    The kernel used to assert even division and let odd shapes (600 x 595)
+    die inside Pallas; now any non-dividing tile degrades to the largest
+    divisors <= the request, with a warning naming both tiles.
+    """
+    from repro.core.tuning import KernelConfig, validate_config
+
+    bx, by, Z = shape
+    bxc, byc = block if block is not None else (bx, by)
+    cfg = validate_config(KernelConfig(block=(bxc, byc), zc=zc), shape,
+                          context=" (stencil_nd_pallas)")
+    return cfg.block + (cfg.zc,)
+
+
 def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
                       offsets: tuple[tuple[int, int, int], ...], *,
-                      radius: int, zc: int, accum_dtype=jnp.float32,
+                      radius: int, zc: int,
+                      block: tuple[int, int] | None = None,
+                      resident: bool | None = None,
+                      accum_dtype=jnp.float32,
                       interpret: bool = True):
     """u = A v on one local block.
 
@@ -62,23 +103,36 @@ def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
     standalone block, fabric-filled by ``core.halo.gather_halo`` inside the
     distributed solver).  ``coeffs[i]`` is the (bx, by, Z) diagonal that
     multiplies the ``offsets[i]``-shifted window.
+
+    ``block``/``zc`` tile the grid (default: full-block x/y, the paper's
+    layout); ``resident`` picks the VMEM form — True keeps the padded
+    iterate fully resident (the only form without ``pl.Element``), False
+    streams element-indexed halo'd windows per grid step.
     """
+    global _TRACED_CALLS
     r = radius
     bx, by, Z = (s - 2 * r for s in v_padded.shape)
-    assert Z % zc == 0, (Z, zc)
-    grid = (Z // zc,)
-    if HAS_PL_ELEMENT:
+    bxc, byc, zc = _valid_tile(block, zc, (bx, by, Z))
+    if resident is None:
+        resident = not HAS_PL_ELEMENT
+    elif not resident and not HAS_PL_ELEMENT:
+        resident = True          # streaming windows need pl.Element
+    grid = (bx // bxc, by // byc, Z // zc)
+    if not resident:
         vspec = pl.BlockSpec(
-            (pl.Element(bx + 2 * r), pl.Element(by + 2 * r), pl.Element(zc + 2 * r)),
-            lambda i: (0, 0, i * zc),
+            (pl.Element(bxc + 2 * r), pl.Element(byc + 2 * r),
+             pl.Element(zc + 2 * r)),
+            lambda i, j, k: (i * bxc, j * byc, k * zc),
         )
     else:
-        vspec = pl.BlockSpec(v_padded.shape, lambda i: (0, 0, 0))
-    cspec = pl.BlockSpec((bx, by, zc), lambda i: (0, 0, i))
+        vspec = pl.BlockSpec(v_padded.shape, lambda i, j, k: (0, 0, 0))
+    cspec = pl.BlockSpec((bxc, byc, zc), lambda i, j, k: (i, j, k))
+    _TRACED_CALLS += 1
     return pl.pallas_call(
         functools.partial(
-            _kernel, offsets=tuple(offsets), radius=r, block=(bx, by, Z),
-            zc=zc, accum_dtype=accum_dtype, resident=not HAS_PL_ELEMENT),
+            _kernel, offsets=tuple(offsets), radius=r,
+            tile=(bxc, byc, zc), accum_dtype=accum_dtype,
+            resident=resident),
         grid=grid,
         in_specs=[vspec] + [cspec] * len(coeffs),
         out_specs=cspec,

@@ -1,6 +1,13 @@
-"""jit'd wrappers for the generalized stencil kernel: VMEM budgeting,
-padding, and the drop-in local-apply (``apply_impl=`` of solve_distributed)
-that pairs the kernel with the depth-r halo exchange."""
+"""jit'd wrappers for the generalized stencil kernel: tuning-cache lookup,
+VMEM budgeting, padding, and the drop-in local-apply (``apply_impl=`` of
+solve_distributed) that pairs the kernel with the depth-r halo exchange.
+
+Every wrapper resolves its tile shapes through the persistent tuning cache
+(``core/tuning``): a swept cell transparently gets its winning
+``KernelConfig`` (x/y tile, Z split, VMEM residency, ring fusion); an
+unswept cell falls back to the deterministic pre-tuning default, so an
+empty cache reproduces the fixed-shape behaviour bit-for-bit.
+"""
 
 from __future__ import annotations
 
@@ -35,13 +42,74 @@ def _spec_order(coeffs: StencilCoeffs, spec: StencilSpec):
     return [coeffs.diags[n] for n in spec.names]
 
 
+def tile_apply(vp: jax.Array, cf_list: list[jax.Array], spec: StencilSpec,
+               config, *, accum_dtype=jnp.float32,
+               interpret: bool | None = None) -> jax.Array:
+    """One fused kernel pass over an r-padded block under a KernelConfig.
+
+    The composition point between the tuning cache and the kernel: every
+    apply path (standalone, blocking, overlap interior, ring patch, fused
+    epilogue) funnels through here so a tuned tile applies uniformly.
+    Per-element accumulation order is tile-independent (each output element
+    is a canonical-order sum over offsets), so any two valid configs give
+    bitwise-identical results.
+    """
+    from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
+
+    return stencil_nd_pallas(
+        vp, cf_list, spec.offsets, radius=spec.radius, zc=config.zc,
+        block=config.block, resident=config.resident,
+        accum_dtype=accum_dtype, interpret=resolve_interpret(interpret))
+
+
+def ring_patch_apply(exchange, cf_list: list[jax.Array], spec: StencilSpec,
+                     config, u: jax.Array, fabric, *,
+                     accum_dtype=jnp.float32,
+                     interpret: bool | None = None) -> jax.Array:
+    """The split overlap epilogue: re-run the kernel on the exchanged
+    depth-r ring slabs and overwrite the ring of ``u`` — one extra kernel
+    launch per boundary region (the fused epilogue folds these away).
+
+    The patch re-runs the same Pallas kernel (not a jnp re-derivation,
+    whose fusion can differ by an ulp), so overlap stays bit-identical to
+    blocking.  Slab tiles are sized per-slab (a tuned full-block tile does
+    not fit a depth-r slab); the slab kernels reuse the default VMEM
+    chunking for their own shapes.
+    """
+    from repro.core import comm, tuning
+
+    r = spec.radius
+    itemsize = jnp.dtype(exchange.padded.dtype).itemsize
+    for reg in comm.boundary_regions(exchange.shape, fabric, r):
+        lo_hi = [(sl.start or 0,
+                  exchange.shape[i] if sl.stop is None else sl.stop)
+                 for i, sl in enumerate(reg)]
+        sub_shape = tuple(hi - lo for lo, hi in lo_hi)
+        sub_vp = exchange.padded[tuple(slice(lo, hi + 2 * r)
+                                       for lo, hi in lo_hi)]
+        sub_cfg = tuning.KernelConfig(
+            block=sub_shape[:2],
+            zc=pick_zc(*sub_shape, itemsize, radius=r,
+                       n_coeffs=spec.n_offsets),
+            resident=config.resident)
+        patch = tile_apply(sub_vp, [c[reg] for c in cf_list], spec, sub_cfg,
+                           accum_dtype=accum_dtype, interpret=interpret)
+        u = u.at[reg].set(patch)
+    return u
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "accum_dtype", "interpret"))
 def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
                   spec: StencilSpec | None = None,
                   accum_dtype=jnp.float32,
                   interpret: bool | None = None) -> jax.Array:
-    """u = A v on a local block (zero-Dirichlet at block edges), any spec."""
-    from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
+    """u = A v on a local block (zero-Dirichlet at block edges), any spec.
+
+    Tile shapes come from the tuning cache (trace-time lookup keyed by
+    {spec x dtype x shape}); without an entry the deterministic default
+    (full-block tile, VMEM-budgeted Z chunk) reproduces the untuned kernel.
+    """
+    from repro.core import tuning
 
     assert v.ndim == 3, "the fused kernel is 3D"
     if coeffs.diag is not None:
@@ -49,20 +117,16 @@ def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
             "the fused stencil kernel assumes the family's unit diagonal; "
             "raw operators go through core.operator.pallas_operator, which "
             "adds the diagonal deviation outside the kernel")
-    interpret = resolve_interpret(interpret)
     spec = spec or coeffs.spec
-    r = spec.radius
-    bx, by, Z = v.shape
-    zc = pick_zc(bx, by, Z, jnp.dtype(v.dtype).itemsize,
-                 radius=r, n_coeffs=spec.n_offsets)
-    vp = jnp.pad(v, r)
-    return stencil_nd_pallas(vp, _spec_order(coeffs, spec), spec.offsets,
-                             radius=r, zc=zc, accum_dtype=accum_dtype,
-                             interpret=interpret)
+    config, _ = tuning.lookup_config(spec, v.dtype, v.shape)
+    vp = jnp.pad(v, spec.radius)
+    return tile_apply(vp, _spec_order(coeffs, spec), spec, config,
+                      accum_dtype=accum_dtype, interpret=interpret)
 
 
 def pallas_local_apply(coeffs, v, fabric, *, policy, overlap: bool | None = None,
-                       schedule=None, interpret: bool | None = None):
+                       schedule=None, interpret: bool | None = None,
+                       fuse_ring: bool | None = None):
     """Drop-in for halo.local_apply: depth-r halo exchange + fused kernel,
     under either communication schedule (``core.comm.SCHEDULES``).
 
@@ -74,52 +138,56 @@ def pallas_local_apply(coeffs, v, fabric, *, policy, overlap: bool | None = None
     ``overlap`` (default): the exchange is issued first, the kernel runs on
     the *zero-padded* block — the interior apply, which depends on no
     collective — and only the depth-r boundary ring is patched from the
-    exchanged block.  The patch re-runs the same Pallas kernel on the ring
-    slabs (not a jnp re-derivation, whose fusion can differ by an ulp), so
-    the result is bit-identical to blocking.
+    exchanged block.  The patch epilogue has two forms, chosen per cell by
+    the tuning cache (``fuse_ring`` overrides):
+
+    * split (default): re-run the kernel on the exchanged ring slabs —
+      one extra launch per boundary region, minimal collective-dependent
+      compute;
+    * fused: fold the ring into the interior kernel's pass by running the
+      one fused kernel over the exchanged block — a single launch per
+      SpMV (2+ -> 1), at the price of the whole pass depending on the
+      exchange (see ``kernels/stencil_nd/fused.py``).
+
+    Both epilogues and the blocking path are bitwise identical: every form
+    accumulates the same canonical-order terms per element.
     """
-    from repro.core import comm
-    from repro.kernels.stencil_nd.kernel import stencil_nd_pallas
+    from repro.core import comm, tuning
+    from repro.kernels.stencil_nd.fused import fused_ring_apply
 
     if coeffs.diag is not None:
         raise NotImplementedError(
             "the fused stencil kernel assumes the family's unit diagonal; "
             "raw operators go through core.operator.pallas_operator, which "
             "adds the diagonal deviation outside the kernel")
-    interpret = resolve_interpret(interpret)
     spec = coeffs.spec
     r = spec.radius
     cf = coeffs.astype(policy.storage)
     vs = v.astype(policy.storage)
-    itemsize = jnp.dtype(vs.dtype).itemsize
     cf_list = _spec_order(cf, spec)
+    config, _ = tuning.lookup_config(spec, vs.dtype, vs.shape)
+    fuse = config.fuse_ring if fuse_ring is None else bool(fuse_ring)
 
     def kernel(vp):
-        bx, by, Z = (s - 2 * r for s in vp.shape)
-        zc = pick_zc(bx, by, Z, itemsize, radius=r, n_coeffs=spec.n_offsets)
-        return stencil_nd_pallas(vp, cf_list, spec.offsets, radius=r, zc=zc,
-                                 accum_dtype=policy.compute,
-                                 interpret=interpret)
+        return tile_apply(vp, cf_list, spec, config,
+                          accum_dtype=policy.compute, interpret=interpret)
 
     def patch_ring(exchange, u):
-        # re-run the same kernel on the exchanged ring slabs (not a jnp
-        # re-derivation, whose fusion can differ by an ulp from the kernel)
-        for reg in comm.boundary_regions(v.shape, fabric, r):
-            lo_hi = [(sl.start or 0, v.shape[i] if sl.stop is None else sl.stop)
-                     for i, sl in enumerate(reg)]
-            sub_vp = exchange.padded[tuple(slice(lo, hi + 2 * r)
-                                           for lo, hi in lo_hi)]
-            patch = stencil_nd_pallas(
-                sub_vp, [c[reg] for c in cf_list], spec.offsets, radius=r,
-                zc=pick_zc(*(hi - lo for lo, hi in lo_hi), itemsize,
-                           radius=r, n_coeffs=spec.n_offsets),
-                accum_dtype=policy.compute, interpret=interpret)
-            u = u.at[reg].set(patch)
-        return u
+        return ring_patch_apply(exchange, cf_list, spec, config, u, fabric,
+                                accum_dtype=policy.compute,
+                                interpret=interpret)
+
+    fused_fn = None
+    if fuse:
+        def fused_fn(exchange):
+            return fused_ring_apply(exchange, cf_list, spec, config,
+                                    accum_dtype=policy.compute,
+                                    interpret=interpret)
 
     return comm.scheduled_apply(
         cf, vs, fabric, policy=policy,
         schedule=schedule if schedule is not None else overlap,
         full_fn=kernel,
         interior_fn=lambda vv: kernel(jnp.pad(vv, r)),
-        patch_fn=patch_ring)
+        patch_fn=patch_ring,
+        fused_fn=fused_fn)

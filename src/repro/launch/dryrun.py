@@ -198,6 +198,8 @@ def _compile_step(cfg: ArchConfig, shape, mesh):
 def _cost_vector(compiled, mesh) -> dict:
     n_dev = math.prod(mesh.devices.shape)
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # pre-0.4.30 jax: one dict per device
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), n_dev)
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -7,6 +7,7 @@ whole stencil family and the full solver x backend x preconditioner matrix.
     PYTHONPATH=src python -m repro.launch.solve --precond chebyshev --problem poisson
     PYTHONPATH=src python -m repro.launch.solve --backend pallas --mesh 16 16 8
     PYTHONPATH=src python -m repro.launch.solve --solver pipelined_bicgstab --schedule overlap
+    PYTHONPATH=src python -m repro.launch.solve --backend pallas --autotune --mesh 16 16 8
 
 Builds a diagonally-dominant system with the requested stencil shape
 (``star7`` is the paper's 7-point MFIX class; ``star25`` the high-order
@@ -101,6 +102,11 @@ def main() -> None:
                          "stars, random for box, poisson for --solver cg; "
                          "heterogeneous is the raw variable-diagonal case "
                          "where --precond jacobi does real work")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep the Pallas kernel tuning space for this "
+                         "cell if the tuning cache has no entry, then "
+                         "solve with the tuned shapes (cache path: "
+                         "REPRO_TUNING_CACHE or results/tuning_cache.json)")
     ap.add_argument("--refine", action="store_true",
                     help="iterative refinement to f32 accuracy")
     ap.add_argument("--paper-separate-reductions", action="store_true",
@@ -120,6 +126,21 @@ def main() -> None:
           f"{spec.n_points} points) {shape} on fabric {dict(mesh.shape)} "
           f"solver={args.solver} backend={args.backend} "
           f"schedule={args.schedule} precond={args.precond} policy={pol.name}")
+
+    if args.autotune:
+        # tune the per-shard kernel cell the pallas backend will look up:
+        # the local block shape under this fabric, in the storage dtype
+        from repro.core import tuning
+        from repro.core.halo import FabricAxes
+
+        fabric = FabricAxes.from_mesh(mesh)
+        local = (shape[0] // fabric.nx, shape[1] // fabric.ny,
+                 shape[2] // fabric.nz)
+        rec = tuning.ensure_tuned(spec, pol.storage, local)
+        hit = "cache hit" if rec["cache_hit"] else "swept"
+        print(f"autotune[{rec['key']}]: {hit}, config={rec['config']}"
+              + ("" if rec["cache_hit"] else
+                 f", speedup vs default {rec['speedup_vs_default']:.2f}x"))
 
     x_true = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
     b = stencil.rhs_for_solution(cf, x_true)

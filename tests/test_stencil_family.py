@@ -138,3 +138,6 @@ def test_family_cell_configs():
             t = (ops_per_meshpoint_star25() if spec.pattern == "star"
                  else ops_per_meshpoint_box27())
             assert t["total"] == 2 * stencil.spec_flops_per_point(spec) + 8 + 12
+    tuned = SEISMIC_CELLS["rtm_chip_tuned"]
+    assert tuned.autotune and tuned.backend == "pallas"
+    assert not SEISMIC_CELLS["rtm_chip"].autotune  # default stays off
