@@ -18,11 +18,11 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single benchmark")
     args = ap.parse_args()
 
-    from benchmarks import (allreduce_model, cfd_step, comm_overlap,
-                            hillclimb, iteration_time, kernel_autotune,
-                            precision_residual, roofline_report, simple_step,
-                            solver_matrix, stencil_family, strong_scaling,
-                            table1_opcounts)
+    from benchmarks import (allreduce_model, batched_solve, cfd_step,
+                            comm_overlap, hillclimb, iteration_time,
+                            kernel_autotune, precision_residual,
+                            roofline_report, simple_step, solver_matrix,
+                            stencil_family, strong_scaling, table1_opcounts)
 
     benches = {
         "table1_opcounts": table1_opcounts.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "stencil_family": stencil_family.run,
         "solver_matrix": solver_matrix.run,
         "comm_overlap": comm_overlap.run,
+        "batched_solve": batched_solve.run,
         "kernel_autotune": kernel_autotune.run,
         "hillclimb": hillclimb.run,
         "simple_step": simple_step.run,
@@ -45,6 +46,7 @@ def main() -> None:
         benches.pop("hillclimb")  # subprocess re-lowers the full cell matrix
         benches["cfd_step"] = lambda: cfd_step.run(smoke=True)
         benches["comm_overlap"] = lambda: comm_overlap.run(smoke=True)
+        benches["batched_solve"] = lambda: batched_solve.run(smoke=True)
         benches["kernel_autotune"] = lambda: kernel_autotune.run(smoke=True)
     if args.only:
         benches = {args.only: benches[args.only]}

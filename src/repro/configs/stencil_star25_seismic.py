@@ -39,6 +39,11 @@ class StencilFamilyCell:
     autotune: bool = False               # launch.solve --autotune: sweep the
     #                                      pallas kernel cell on first run,
     #                                      then serve from the tuning cache
+    nrhs: int = 1                        # right-hand sides per block solve
+    #                                      (launch.solve --nrhs): >1 batches
+    #                                      the whole Krylov iteration — halo
+    #                                      slabs of all RHS per ppermute, one
+    #                                      AllReduce of [k, B] per sync point
 
 
 SEISMIC_CELLS = {
@@ -61,6 +66,19 @@ SEISMIC_CELLS = {
     "rtm_chip_tuned": StencilFamilyCell("rtm_chip_tuned", (96, 96, 352),
                                         "star25", backend="pallas",
                                         autotune=True),
+}
+
+
+#: Batched (many-RHS) workload cells, kept out of SEISMIC_CELLS: they are
+#: not star25 workloads (the ops-table assertions over SEISMIC_CELLS assume
+#: the seismic stencil) but the batched-solve benchmark's configuration
+#: surface.  ``batched_poisson`` is the cell ``benchmarks/batched_solve.py``
+#: sweeps over B.
+BATCHED_CELLS = {
+    "batched_poisson": StencilFamilyCell(
+        "batched_poisson", (24, 24, 16), "star7", policy="f32",
+        problem="poisson", solver="pipelined_bicgstab", schedule="overlap",
+        nrhs=8),
 }
 
 

@@ -170,6 +170,14 @@ def solve_distributed(
     ``precond`` ("none" | "jacobi" | "chebyshev" | a PrecondConfig) applies
     on the right, so the collective schedule is unchanged.  ``apply_impl``
     is the legacy hook swapping the local SpMV for a custom kernel.
+
+    Block (many-RHS) solves: pass ``b`` with a leading batch axis
+    ``(B,) + coeffs.shape``.  The batch axis is replicated (each shard owns
+    its block of every RHS), halo slabs of all B RHS ride each ppermute
+    message, every sync point reduces the stacked ``[k, B]`` partials in
+    one AllReduce, and the returned SolveResult carries per-RHS ``[B]``
+    iteration counts / flags / residuals.  The collective count per
+    iteration is independent of B.
     """
     sched = get_schedule(schedule if schedule is not None else overlap_halo)
     fabric = FabricAxes.from_mesh(mesh)
@@ -181,7 +189,9 @@ def solve_distributed(
             "backend='reference' is single-address-space only; use "
             "backend='spmd' or 'pallas' on a multi-device mesh "
             "(or solve_ref on the undistributed arrays)")
-    spec = fabric.spec(b.ndim)
+    nb = b.ndim - coeffs.ndim       # leading batch (many-RHS) axes
+    spec = fabric.spec(coeffs.ndim, n_batch=nb)
+    cf_spec = fabric.spec(coeffs.ndim)
     cf = coeffs.astype(policy.storage)
     pconf = get_precond_config(precond)
     solver_fn = get_solver(solver)
@@ -209,7 +219,7 @@ def solve_distributed(
         x0 = jnp.zeros_like(b)
     mapped = shard_map(
         solve_fn, mesh=mesh,
-        in_specs=(spec, spec, spec),
+        in_specs=(cf_spec, spec, spec),
         out_specs=out_specs,
         # Pallas applies produce ShapeDtypeStructs without vma metadata;
         # out_specs above are explicit, so the vma checker adds nothing here.

@@ -106,14 +106,21 @@ class HaloExchange:
 
     padded: jax.Array
     radius: int
-    shape: tuple[int, ...]          # the unpadded local block shape
+    shape: tuple[int, ...]          # the unpadded local *mesh* block shape
+    n_batch: int = 0                # leading batch axes riding the exchange
 
 
 def start_halo_exchange(v: jax.Array, fabric: FabricAxes, radius: int, *,
-                        corners: bool = False) -> HaloExchange:
-    """Issue the depth-r slab ``ppermute``s and return the in-flight handle."""
-    return HaloExchange(gather_halo(v, fabric, radius, corners=corners),
-                        radius, v.shape)
+                        corners: bool = False, n_batch: int = 0) -> HaloExchange:
+    """Issue the depth-r slab ``ppermute``s and return the in-flight handle.
+
+    With ``n_batch`` leading batch axes, each ppermute message carries the
+    slab of every RHS at once (``(B, r, ...)``) — the message count per
+    exchange is independent of the batch size.
+    """
+    return HaloExchange(
+        gather_halo(v, fabric, radius, corners=corners, n_batch=n_batch),
+        radius, v.shape[n_batch:], n_batch)
 
 
 def boundary_regions(shape: tuple[int, ...], fabric: FabricAxes,
@@ -141,8 +148,9 @@ def boundary_ring_apply(coeffs: StencilCoeffs, exchange: HaloExchange,
     from the exchanged block with the same term order as the full apply —
     the patched result is bit-identical to the blocking path.
     """
+    pre = (slice(None),) * exchange.n_batch
     for reg in boundary_regions(exchange.shape, fabric, exchange.radius):
-        u = u.at[reg].set(
+        u = u.at[pre + reg].set(
             padded_apply(coeffs, exchange.padded, exchange.shape,
                          policy=policy, region=reg).astype(u.dtype))
     return u
@@ -189,16 +197,18 @@ def scheduled_apply(coeffs: StencilCoeffs, v: jax.Array, fabric: FabricAxes, *,
     """
     spec = coeffs.spec
     r = spec.radius
+    nb = v.ndim - coeffs.ndim       # leading batch (many-RHS) axes
     sched = get_schedule(schedule)
 
     if not sched.overlap_halo:
-        vp = gather_halo(v, fabric, r, corners=spec.needs_corners)
+        vp = gather_halo(v, fabric, r, corners=spec.needs_corners, n_batch=nb)
         if full_fn is not None:
             return full_fn(vp)
         return padded_apply(coeffs, vp, v.shape,
                             policy=policy).astype(policy.storage)
 
-    exchange = start_halo_exchange(v, fabric, r, corners=spec.needs_corners)
+    exchange = start_halo_exchange(v, fabric, r, corners=spec.needs_corners,
+                                   n_batch=nb)
     if fused_fn is not None:
         return fused_fn(exchange)
     if interior_fn is None:

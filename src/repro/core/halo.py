@@ -61,11 +61,17 @@ class FabricAxes:
             z="pod" if "pod" in ax else None, nz=ax.get("pod", 1),
         )
 
-    def spec(self, ndim: int = 3) -> P:
-        """PartitionSpec for a mesh-shaped field (X, Y[, Z])."""
+    def spec(self, ndim: int = 3, *, n_batch: int = 0) -> P:
+        """PartitionSpec for a mesh-shaped field (X, Y[, Z]).
+
+        ``n_batch`` prepends unsharded (replicated) axes for fields that
+        carry a leading batch of right-hand sides: every shard owns its
+        block of *all* B RHS, so the batch never moves over the fabric.
+        """
+        batch = (None,) * n_batch
         if ndim == 2:
-            return P(self.x, self.y)
-        return P(self.x, self.y, self.z)
+            return P(*batch, self.x, self.y)
+        return P(*batch, self.x, self.y, self.z)
 
     def split_info(self, ndim: int = 3) -> list[tuple[int, str | None, int]]:
         """(mesh axis, fabric axis name or None, fabric extent) per dimension."""
@@ -100,6 +106,7 @@ def gather_halo(
     radius: int = 1,
     *,
     corners: bool = False,
+    n_batch: int = 0,
 ) -> jax.Array:
     """The local block padded by ``radius`` on every axis, halos filled.
 
@@ -108,6 +115,12 @@ def gather_halo(
     depth-r halo coalesced into one ``ppermute`` message per direction).
     Unsplit axes and fabric edges are zero-padded — the global zero-Dirichlet
     boundary.
+
+    ``n_batch`` leading axes of ``v`` are batch (many-RHS) axes: they are
+    never padded or split, and each exchanged slab carries all B right-hand
+    sides — a depth-r batched exchange moves ``(B, r, ...)`` slabs in the
+    *same* number of ppermute messages as a single RHS, amortizing the
+    per-message fabric latency across the whole batch.
 
     ``corners=False`` (star stencils): the axes exchange independently on the
     raw block, so all collectives are mutually independent and overlappable
@@ -120,7 +133,9 @@ def gather_halo(
     diagonal messages on the torus.
     """
     r = radius
-    splits = fabric.split_info(v.ndim)
+    nb = n_batch
+    splits = [(ax + nb, name, n)
+              for ax, name, n in fabric.split_info(v.ndim - nb)]
     for axis, name, n in splits:
         if name is not None and n > 1 and v.shape[axis] < r:
             raise ValueError(
@@ -128,7 +143,7 @@ def gather_halo(
                 f"on axis {axis}; use fewer shards or a larger mesh")
 
     if not corners:
-        vp = jnp.pad(v, r)
+        vp = jnp.pad(v, [(0, 0)] * nb + [(r, r)] * (v.ndim - nb))
         for axis, name, n in splits:
             if name is None or n == 1:
                 continue
@@ -136,7 +151,9 @@ def gather_halo(
             hi = _take_slab(v, axis, slice(v.shape[axis] - r, None))
             from_lo, from_hi = _exchange(lo, hi, name, n)
             idx = lambda sl: tuple(
-                sl if i == axis else slice(r, r + v.shape[i]) for i in range(v.ndim))
+                slice(None) if i < nb
+                else sl if i == axis
+                else slice(r, r + v.shape[i]) for i in range(v.ndim))
             vp = vp.at[idx(slice(0, r))].set(from_lo)
             vp = vp.at[idx(slice(r + v.shape[axis], None))].set(from_hi)
         return vp
@@ -157,9 +174,13 @@ def gather_halo(
 
 
 def _window(vp: jax.Array, off: tuple[int, ...], shape: tuple[int, ...],
-            r: int) -> jax.Array:
-    """The ``shape``-sized window of the r-padded block shifted by ``off``."""
-    return vp[tuple(slice(r + o, r + o + n) for o, n in zip(off, shape))]
+            r: int, n_batch: int = 0) -> jax.Array:
+    """The ``shape``-sized window of the r-padded block shifted by ``off``.
+
+    ``n_batch`` leading axes of ``vp`` are unpadded batch axes, taken whole.
+    """
+    return vp[(slice(None),) * n_batch
+              + tuple(slice(r + o, r + o + n) for o, n in zip(off, shape))]
 
 
 def padded_apply(
@@ -172,21 +193,28 @@ def padded_apply(
 ) -> jax.Array:
     """u = A v from an r-padded local block (halos already in place).
 
+    ``vp`` (and ``shape``) may carry a leading batch axis: the coefficients
+    broadcast across it and ``region`` keeps addressing the trailing mesh
+    dims only.
+
     ``region`` restricts the computation to a sub-box of the local block —
     used by the overlap schedule to recompute only the halo-dependent
     boundary ring (``core.comm.boundary_ring_apply``).
     """
     spec = coeffs.spec
     c = policy.compute
-    reg = region if region is not None else tuple(slice(None) for _ in shape)
-    sub = lambda off: _window(vp, off, shape, spec.radius)[reg].astype(c)
-    center = sub((0,) * len(shape))
+    nb = vp.ndim - coeffs.ndim
+    mesh_shape = tuple(shape[len(shape) - coeffs.ndim:])
+    reg = region if region is not None else tuple(slice(None) for _ in mesh_shape)
+    vreg = (slice(None),) * nb + tuple(reg)
+    sub = lambda off: _window(vp, off, mesh_shape, spec.radius, nb)[vreg].astype(c)
+    center = sub((0,) * coeffs.ndim)
     if coeffs.diag is None:  # unit main diagonal (Jacobi-normalized family)
         u = center
     else:
         u = coeffs.diag[reg].astype(c) * center
     for name, cf in coeffs.ordered_items():   # canonical order — see StencilCoeffs
-        u = u + cf[reg].astype(c) * sub(name_offset(name, len(shape)))
+        u = u + cf[reg].astype(c) * sub(name_offset(name, coeffs.ndim))
     return u
 
 
@@ -195,12 +223,15 @@ def interior_apply(coeffs: StencilCoeffs, v: jax.Array, *,
     """Zero-Dirichlet local apply in compute dtype — reads nothing a
     collective produced, so it is the work the overlap schedule runs while
     the halo faces are in flight.  Correct everywhere except the depth-r
-    boundary ring bordering a split axis (patched afterwards)."""
+    boundary ring bordering a split axis (patched afterwards).  ``v`` may
+    carry a leading batch axis (shifts act on the trailing mesh dims)."""
     c = policy.compute
+    nb = v.ndim - coeffs.ndim
     vc = v.astype(c)
     u = vc if coeffs.diag is None else coeffs.diag.astype(c) * vc
     for name, cf in coeffs.ordered_items():   # canonical order — see StencilCoeffs
-        u = u + cf.astype(c) * _shift_nd(vc, name_offset(name, v.ndim))
+        u = u + cf.astype(c) * _shift_nd(
+            vc, (0,) * nb + name_offset(name, coeffs.ndim))
     return u
 
 
@@ -248,12 +279,14 @@ def global_apply(mesh, coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = 
                  overlap: bool | None = None, schedule=None) -> jax.Array:
     """Convenience wrapper: one distributed SpMV on global arrays."""
     fabric = FabricAxes.from_mesh(mesh)
-    spec = fabric.spec(v.ndim)
+    nb = v.ndim - coeffs.ndim
+    cf_spec = fabric.spec(coeffs.ndim)
+    v_spec = fabric.spec(coeffs.ndim, n_batch=nb)
 
     def fn(cf, vv):
         return local_apply(cf, vv, fabric, policy=policy, overlap=overlap,
                            schedule=schedule)
 
     from repro.compat import shard_map
-    return shard_map(fn, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
-                     check_vma=False)(coeffs, v)
+    return shard_map(fn, mesh=mesh, in_specs=(cf_spec, v_spec),
+                     out_specs=v_spec, check_vma=False)(coeffs, v)

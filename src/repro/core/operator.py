@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from repro.core.comm import CommSchedule, OVERLAP, get_schedule, scheduled_apply
 from repro.core.halo import FabricAxes
 from repro.core.precision import Policy, F32
-from repro.core.solvers.common import local_dots
+from repro.core.solvers.common import local_dots, local_partial
 from repro.core.stencil import StencilCoeffs, apply_ref
 
 
@@ -106,8 +106,15 @@ def _fabric_axis_names(fabric: FabricAxes) -> tuple[str, ...]:
     return tuple(a for a, n in pairs if a is not None and n > 1)
 
 
-def _make_reductions(names: tuple[str, ...], fused_reductions: bool):
-    """(dots, reduce_partials, reduce_max) over the named fabric axes."""
+def _make_reductions(names: tuple[str, ...], fused_reductions: bool,
+                     mesh_ndim: int | None = None):
+    """(dots, reduce_partials, reduce_max) over the named fabric axes.
+
+    ``mesh_ndim`` enables the batched (many-RHS) path: operands of higher
+    rank produce per-RHS ``[B]`` partials, and a fused sync point psums the
+    stacked ``[k, B]`` array in ONE AllReduce — the collective count is
+    independent of the batch size.
+    """
     def psum(x):
         return jax.lax.psum(x, names) if names else x
 
@@ -119,9 +126,12 @@ def _make_reductions(names: tuple[str, ...], fused_reductions: bool):
             return jnp.stack([psum(jnp.asarray(p, jnp.float32)) for p in ps])
 
     def dots(pairs, policy):
-        # local FMAC-style partials (see Policy.dot), then one psum per
-        # sync point (fused) or per dot (paper-faithful separate)
-        return reduce_partials([policy.dot(a, b) for a, b in pairs])
+        # local FMAC-style partials (see Policy.dot; per-RHS rows when
+        # batched), then one psum per sync point (fused) or per dot
+        # (paper-faithful separate)
+        return reduce_partials(
+            [local_partial(a, b, policy, mesh_ndim=mesh_ndim)
+             for a, b in pairs])
 
     def reduce_max(x):
         return jax.lax.pmax(x, names) if names else x
@@ -140,7 +150,8 @@ def reference_operator(coeffs: StencilCoeffs, *, policy: Policy = F32,
     return LinearOperator(
         name="reference", coeffs=cf, policy=policy,
         apply=lambda v: apply_ref(cf, v, policy=policy),
-        dots=local_dots,
+        dots=lambda pairs, policy: local_dots(pairs, policy,
+                                              mesh_ndim=cf.ndim),
         reduce_partials=_identity_reduce,
         reduce_max=lambda x: x,
         schedule=get_schedule(schedule),
@@ -160,7 +171,7 @@ def spmd_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
     cf = coeffs.astype(policy.storage)
     sched = get_schedule(schedule if schedule is not None else overlap)
     dots, reduce_partials, reduce_max = _make_reductions(
-        _fabric_axis_names(fabric), fused_reductions)
+        _fabric_axis_names(fabric), fused_reductions, mesh_ndim=cf.ndim)
     return LinearOperator(
         name="spmd", coeffs=cf, policy=policy,
         apply=lambda v: scheduled_apply(cf, v, fabric, policy=policy,
@@ -199,7 +210,7 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
     sched = get_schedule(schedule if schedule is not None else overlap)
     it = resolve_interpret(interpret)
     _dots, reduce_partials, reduce_max = _make_reductions(
-        _fabric_axis_names(fabric), fused_reductions)
+        _fabric_axis_names(fabric), fused_reductions, mesh_ndim=cf.ndim)
 
     cf_unit = StencilCoeffs(cf.diags)  # the kernel's unit-diagonal contract
     base_apply = lambda v: pallas_local_apply(cf_unit, v, fabric, policy=policy,
@@ -216,7 +227,11 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
         def apply(v):
             return (base_apply(v).astype(c) + dcorr * v.astype(c)).astype(policy.storage)
 
-    dot_partial = lambda a, b: dot_mixed(a, b, interpret=it)
+    # the fused_iter passes switch to their per-RHS-tiled variants whenever
+    # an operand carries a leading batch axis (rank above the mesh rank)
+    batched = lambda a: a.ndim > cf.ndim
+    dot_partial = lambda a, b: dot_mixed(a, b, interpret=it,
+                                         batched=batched(a))
 
     return LinearOperator(
         name="pallas", coeffs=cf, policy=policy,
@@ -229,11 +244,11 @@ def pallas_operator(coeffs: StencilCoeffs, fabric: FabricAxes | None = None, *,
         fused=FusedOps(
             dot_partial=dot_partial,
             update_q_dots=lambda alpha, r, s, y: update_q_dots(
-                alpha, r, s, y, interpret=it),
+                alpha, r, s, y, interpret=it, batched=batched(r)),
             update_xr_dots=lambda alpha, omega, x, p, q, y, r0: update_xr_dots(
-                alpha, omega, x, p, q, y, r0, interpret=it),
+                alpha, omega, x, p, q, y, r0, interpret=it, batched=batched(x)),
             update_p=lambda beta, omega, r, p, s: update_p(
-                beta, omega, r, p, s, interpret=it),
+                beta, omega, r, p, s, interpret=it, batched=batched(r)),
         ),
     )
 

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import (
-    SolveResult, axpy_family, convergence_test, finish, run_krylov, safe_div,
+    SolveResult, axpy_family, bcast_scalar, convergence_test, finish,
+    init_counters, run_krylov, safe_div,
 )
 
 
@@ -89,10 +90,9 @@ def bicgstab_loop(
         brk = bad1 | bad2 | bad3 | bad4
         return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
 
-    init = (
-        jnp.int32(0), x0, r0, r0, rho0, rho0,
-        converged(rho0), jnp.bool_(False),
-    )
+    conv0 = converged(rho0)
+    i0, brk0 = init_counters(conv0)
+    init = (i0, x0, r0, r0, rho0, rho0, conv0, brk0)
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
     return finish(final, bnorm2, history=hist)
@@ -144,7 +144,8 @@ def bicgstab_fused_loop(
         s = op.apply(p)
         (r0s,) = op.reduce_partials([f.dot_partial(r0, s)])     # AllReduce 1
         alpha, bad1 = safe_div(rho, r0s)
-        q_in = r - alpha.astype(st) * s          # SpMV input (kernel-identical)
+        # SpMV input (kernel-identical); bcast aligns a per-RHS [B] alpha
+        q_in = r - bcast_scalar(alpha.astype(st), s) * s
         y = op.apply(q_in)
         q, qy, yy = f.update_q_dots(alpha, r, s, y)
         qy, yy = op.reduce_partials([qy, yy])                   # AllReduce 2
@@ -158,10 +159,9 @@ def bicgstab_fused_loop(
         brk = bad1 | bad2 | bad3 | bad4
         return i + 1, x, r_new, p, rho_new, res2_new, conv, brk
 
-    init = (
-        jnp.int32(0), x0, r0, r0, rho0, rho0,
-        converged(rho0), jnp.bool_(False),
-    )
+    conv0 = converged(rho0)
+    i0, brk0 = init_counters(conv0)
+    init = (i0, x0, r0, r0, rho0, rho0, conv0, brk0)
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
     return finish(final, bnorm2, history=hist)

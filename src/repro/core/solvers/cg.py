@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import (
-    SolveResult, axpy_family, convergence_test, finish, run_krylov, safe_div,
+    SolveResult, axpy_family, convergence_test, finish, init_counters,
+    run_krylov, safe_div,
 )
 
 
@@ -60,8 +61,9 @@ def cg_loop(
         conv = converged(rho_new)
         return i + 1, x, r, p, rho_new, conv, brk | bad1 | bad2
 
-    init = (jnp.int32(0), x, r, r, rho0,
-            converged(rho0), jnp.bool_(False))
+    conv0 = converged(rho0)
+    i0, brk0 = init_counters(conv0)
+    init = (i0, x, r, r, rho0, conv0, brk0)
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
     return finish(final, bnorm2, history=hist)

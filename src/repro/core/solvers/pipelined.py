@@ -49,7 +49,8 @@ import jax.numpy as jnp
 
 from repro.core.precision import Policy, F32
 from repro.core.solvers.common import (
-    SolveResult, axpy_family, convergence_test, finish, run_krylov, safe_div,
+    SolveResult, axpy_family, convergence_test, finish, init_counters,
+    run_krylov, safe_div,
 )
 
 
@@ -122,10 +123,9 @@ def pipelined_bicgstab_loop(
         brk = bad1 | bad2 | bad3 | bad4
         return (i + 1, x, r_new, p_new, s_new, z_new, t_new, rr, conv, brk)
 
-    init = (
-        jnp.int32(0), x0, r0, r0, s0, s0, t0, rho0,
-        converged(rho0), jnp.bool_(False),
-    )
+    conv0 = converged(rho0)
+    i0, brk0 = init_counters(conv0)
+    init = (i0, x0, r0, r0, s0, s0, t0, rho0, conv0, brk0)
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
     return finish(final, bnorm2, history=hist)
@@ -184,10 +184,14 @@ def pipelined_cg_loop(
         return i + 1, x, r, w, p, s, z, gamma, alpha, gamma, conv, brk
 
     zeros = jnp.zeros_like(b)
+    conv0 = converged(gamma0)
+    i0, brk0 = init_counters(conv0)
+    # alpha_old shaped like gamma (per-RHS for batched solves) so the
+    # while_loop carry structure is shape-stable
     init = (
-        jnp.int32(0), x, r, w0, zeros, zeros, zeros,
-        gamma0, jnp.float32(1.0), gamma0,
-        converged(gamma0), jnp.bool_(False),
+        i0, x, r, w0, zeros, zeros, zeros,
+        gamma0, jnp.ones_like(gamma0), gamma0,
+        conv0, brk0,
     )
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)

@@ -306,17 +306,24 @@ def apply_ref(coeffs: StencilCoeffs, v: jax.Array, *, policy: Policy = F32) -> j
     ``policy.compute`` (Table I counts these as half precision in the mixed
     policy); the unit diagonal contributes ``v`` directly.
 
+    ``v`` may carry a leading batch axis (shape ``(B,) + coeffs.shape``):
+    the offsets act on the trailing mesh dims and the coefficients
+    broadcast across the batch, so one call applies A to B right-hand
+    sides at once (and the ``B=1`` result is bitwise identical to the
+    unbatched apply — same elementwise arithmetic, broadcast axis aside).
+
     Terms accumulate in the canonical order of ``coeffs.ordered_items()``
     — the same order every distributed apply path and the Pallas kernel
     use, which keeps the backends bit-comparable.
     """
     c = policy.compute
+    nb = v.ndim - coeffs.ndim          # leading batch axes (0 or 1)
     if coeffs.diag is None:
         u = v.astype(c)
     else:
         u = coeffs.diag.astype(c) * v.astype(c)
     for name, cf in coeffs.ordered_items():
-        off = name_offset(name, v.ndim)
+        off = (0,) * nb + name_offset(name, coeffs.ndim)
         u = u + cf.astype(c) * _shift_nd(v, off).astype(c)
     return u.astype(policy.storage)
 

@@ -261,12 +261,18 @@ def lookup_config(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
                   ) -> tuple[KernelConfig, str]:
     """The call every kernel wrapper makes: ``(config, source)``.
 
+    ``shape`` may carry leading batch axes (a many-RHS apply); only the
+    trailing mesh dims key the lookup — a cell tuned at ``(bx, by, Z)``
+    serves every batch size, since the kernel's per-step working set is
+    one RHS's tile either way.
+
     ``source`` is ``"cache"`` for a valid tuned entry, ``"default"`` when
     the cache is disabled/missing/has no entry, and ``"stale"`` when an
     entry exists but names a tile that no longer divides ``shape`` (the
     deterministic default is used, with a warning) — so tests and CI can
     assert lookups do not silently regress to defaults.
     """
+    shape = tuple(shape)[-3:]
     cache = cache if cache is not None else get_cache()
     key = cache_key(spec, dtype, shape)
     if cache is not None:

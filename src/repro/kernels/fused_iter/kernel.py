@@ -13,11 +13,21 @@ f32 scalar accumulators carried across sequential grid steps (TPU grid
 iterations execute in order, so += into a (1,1) output block is sound; same
 semantics in interpret mode).
 
+Batched (many-RHS) form: every wrapper takes ``batched=True`` and then works
+on a ``(B, rows, 128)`` tiling with grid ``(B, rows // bm)`` — the row-sweep
+axis moves to grid position 1 (``seq_axis``), the per-RHS scalars ride in
+``(B, 1)``/``(B, 2)`` blocks indexed by the batch coordinate, and each RHS
+accumulates its own f32 partial into its own ``(1, 1)`` output block.  Per
+RHS the arithmetic (tile shapes, sweep order, accumulation order) is
+identical to the unbatched form, so B=1 is bitwise equal.
+
 Precision: products in the storage dtype (bf16), accumulation in f32 — the
 paper's FMAC discipline (Table I mixed column).
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +42,14 @@ def _scalar_spec():
     return pl.BlockSpec((1, 1), lambda i: (0, 0))
 
 
+def _row_spec_b(bm):
+    return pl.BlockSpec((1, bm, 128), lambda b, i: (b, i, 0))
+
+
+def _scalar_spec_b(width: int = 1):
+    return pl.BlockSpec((1, width), lambda b, i: (b, 0))
+
+
 def _acc_init(i, *refs):
     @pl.when(i == 0)
     def _():
@@ -41,8 +59,9 @@ def _acc_init(i, *refs):
 
 # --- q = r - alpha*s ; partials <q,y>, <y,y> ------------------------------
 
-def _update_q_kernel(alpha_ref, r_ref, s_ref, y_ref, q_ref, qy_ref, yy_ref):
-    i = pl.program_id(0)
+def _update_q_kernel(alpha_ref, r_ref, s_ref, y_ref, q_ref, qy_ref, yy_ref,
+                     *, seq_axis=0):
+    i = pl.program_id(seq_axis)
     _acc_init(i, qy_ref, yy_ref)
     alpha = alpha_ref[0, 0]
     q = r_ref[...] - (alpha.astype(r_ref.dtype) * s_ref[...])
@@ -52,7 +71,23 @@ def _update_q_kernel(alpha_ref, r_ref, s_ref, y_ref, q_ref, qy_ref, yy_ref):
     yy_ref[...] += jnp.sum(yf * yf).reshape(1, 1)
 
 
-def update_q_dots_pallas(alpha, r, s, y, *, bm: int, interpret: bool = True):
+def update_q_dots_pallas(alpha, r, s, y, *, bm: int, interpret: bool = True,
+                         batched: bool = False):
+    if batched:
+        B, M = r.shape[0], r.shape[1]
+        row, sca = _row_spec_b(bm), _scalar_spec_b()
+        return pl.pallas_call(
+            functools.partial(_update_q_kernel, seq_axis=1),
+            grid=(B, M // bm),
+            in_specs=[sca, row, row, row],
+            out_specs=[row, sca, sca],
+            out_shape=[
+                jax.ShapeDtypeStruct(r.shape, r.dtype),
+                jax.ShapeDtypeStruct((B, 1), jnp.float32),
+                jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(alpha.reshape(B, 1).astype(jnp.float32), r, s, y)
     M = r.shape[0]
     grid = (M // bm,)
     return pl.pallas_call(
@@ -72,8 +107,8 @@ def update_q_dots_pallas(alpha, r, s, y, *, bm: int, interpret: bool = True):
 # --- x += alpha*p + omega*q ; r = q - omega*y ; <r0,r>, <r,r> --------------
 
 def _update_xr_kernel(ab_ref, x_ref, p_ref, q_ref, y_ref, r0_ref,
-                      xo_ref, ro_ref, r0r_ref, rr_ref):
-    i = pl.program_id(0)
+                      xo_ref, ro_ref, r0r_ref, rr_ref, *, seq_axis=0):
+    i = pl.program_id(seq_axis)
     _acc_init(i, r0r_ref, rr_ref)
     alpha = ab_ref[0, 0].astype(x_ref.dtype)
     omega = ab_ref[0, 1].astype(x_ref.dtype)
@@ -87,7 +122,24 @@ def _update_xr_kernel(ab_ref, x_ref, p_ref, q_ref, y_ref, r0_ref,
 
 
 def update_xr_dots_pallas(alpha, omega, x, p, q, y, r0, *, bm: int,
-                          interpret: bool = True):
+                          interpret: bool = True, batched: bool = False):
+    if batched:
+        B, M = x.shape[0], x.shape[1]
+        ab = jnp.stack([alpha, omega], axis=-1).astype(jnp.float32)  # (B, 2)
+        row = _row_spec_b(bm)
+        return pl.pallas_call(
+            functools.partial(_update_xr_kernel, seq_axis=1),
+            grid=(B, M // bm),
+            in_specs=[_scalar_spec_b(2)] + [row] * 5,
+            out_specs=[row, row, _scalar_spec_b(), _scalar_spec_b()],
+            out_shape=[
+                jax.ShapeDtypeStruct(x.shape, x.dtype),
+                jax.ShapeDtypeStruct(x.shape, x.dtype),
+                jax.ShapeDtypeStruct((B, 1), jnp.float32),
+                jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(ab, x, p, q, y, r0)
     M = x.shape[0]
     ab = jnp.stack([alpha, omega]).reshape(1, 2).astype(jnp.float32)
     return pl.pallas_call(
@@ -113,7 +165,20 @@ def _update_p_kernel(bo_ref, r_ref, p_ref, s_ref, po_ref):
     po_ref[...] = r_ref[...] + beta * (p_ref[...] - omega * s_ref[...])
 
 
-def update_p_pallas(beta, omega, r, p, s, *, bm: int, interpret: bool = True):
+def update_p_pallas(beta, omega, r, p, s, *, bm: int, interpret: bool = True,
+                    batched: bool = False):
+    if batched:
+        B, M = r.shape[0], r.shape[1]
+        bo = jnp.stack([beta, omega], axis=-1).astype(jnp.float32)   # (B, 2)
+        row = _row_spec_b(bm)
+        return pl.pallas_call(
+            _update_p_kernel,
+            grid=(B, M // bm),
+            in_specs=[_scalar_spec_b(2)] + [row] * 3,
+            out_specs=row,
+            out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+            interpret=interpret,
+        )(bo, r, p, s)
     M = r.shape[0]
     bo = jnp.stack([beta, omega]).reshape(1, 2).astype(jnp.float32)
     return pl.pallas_call(
@@ -128,14 +193,26 @@ def update_p_pallas(beta, omega, r, p, s, *, bm: int, interpret: bool = True):
 
 # --- plain mixed-precision dot --------------------------------------------
 
-def _dot_kernel(a_ref, b_ref, o_ref):
-    i = pl.program_id(0)
+def _dot_kernel(a_ref, b_ref, o_ref, *, seq_axis=0):
+    i = pl.program_id(seq_axis)
     _acc_init(i, o_ref)
     prod = (a_ref[...] * b_ref[...]).astype(jnp.float32)   # bf16 multiply, f32 add
     o_ref[...] += jnp.sum(prod).reshape(1, 1)
 
 
-def dot_mixed_pallas(a, b, *, bm: int, interpret: bool = True):
+def dot_mixed_pallas(a, b, *, bm: int, interpret: bool = True,
+                     batched: bool = False):
+    if batched:
+        B, M = a.shape[0], a.shape[1]
+        row = _row_spec_b(bm)
+        return pl.pallas_call(
+            functools.partial(_dot_kernel, seq_axis=1),
+            grid=(B, M // bm),
+            in_specs=[row, row],
+            out_specs=_scalar_spec_b(),
+            out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            interpret=interpret,
+        )(a, b)
     M = a.shape[0]
     return pl.pallas_call(
         _dot_kernel,

@@ -1,6 +1,12 @@
 """jit'd wrappers: flatten the mesh block to (rows, 128), pad, dispatch, and
 reshape back.  Zero padding is exact for every fused op (pads contribute 0 to
-dots and are sliced off the vector outputs)."""
+dots and are sliced off the vector outputs).
+
+``batched=True`` flattens each RHS of a ``(B, mesh...)`` operand to its own
+(rows, 128) plane — the per-RHS row layout, padding, and block size are
+exactly the unbatched ones — and returns per-RHS ``[B]`` scalars for the dot
+partials (the solver stacks one sync point's partials into a single ``[k, B]``
+AllReduce)."""
 
 from __future__ import annotations
 
@@ -15,7 +21,15 @@ LANES = 128
 DEFAULT_BM = 512
 
 
-def _to_rows(a: jax.Array):
+def _to_rows(a: jax.Array, n_batch: int = 0):
+    if n_batch:
+        B = a.shape[0]
+        n = a.size // B
+        rows = -(-n // LANES)
+        bm = min(DEFAULT_BM, rows)
+        rows_pad = -(-rows // bm) * bm
+        flat = jnp.pad(a.reshape(B, -1), ((0, 0), (0, rows_pad * LANES - n)))
+        return flat.reshape(B, rows_pad, LANES), bm
     n = a.size
     rows = -(-n // LANES)
     bm = min(DEFAULT_BM, rows)
@@ -24,49 +38,66 @@ def _to_rows(a: jax.Array):
     return flat.reshape(rows_pad, LANES), bm
 
 
-def _like(flat: jax.Array, a: jax.Array):
+def _like(flat: jax.Array, a: jax.Array, n_batch: int = 0):
+    if n_batch:
+        B = a.shape[0]
+        return flat.reshape(B, -1)[:, : a.size // B].reshape(a.shape)
     return flat.reshape(-1)[: a.size].reshape(a.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def update_q_dots(alpha, r, s, y, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "batched"))
+def update_q_dots(alpha, r, s, y, *, interpret: bool | None = None,
+                  batched: bool = False):
     from repro.kernels.fused_iter.kernel import update_q_dots_pallas
     interpret = resolve_interpret(interpret)
-    r2, bm = _to_rows(r)
-    s2, _ = _to_rows(s)
-    y2, _ = _to_rows(y)
+    nb = 1 if batched else 0
+    r2, bm = _to_rows(r, nb)
+    s2, _ = _to_rows(s, nb)
+    y2, _ = _to_rows(y, nb)
     q2, qy, yy = update_q_dots_pallas(jnp.asarray(alpha), r2, s2, y2,
-                                      bm=bm, interpret=interpret)
+                                      bm=bm, interpret=interpret,
+                                      batched=batched)
+    if batched:
+        return _like(q2, r, nb), qy[:, 0], yy[:, 0]
     return _like(q2, r), qy[0, 0], yy[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def update_xr_dots(alpha, omega, x, p, q, y, r0, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "batched"))
+def update_xr_dots(alpha, omega, x, p, q, y, r0, *,
+                   interpret: bool | None = None, batched: bool = False):
     from repro.kernels.fused_iter.kernel import update_xr_dots_pallas
     interpret = resolve_interpret(interpret)
-    arrs = [_to_rows(a)[0] for a in (x, p, q, y, r0)]
-    bm = _to_rows(x)[1]
+    nb = 1 if batched else 0
+    arrs = [_to_rows(a, nb)[0] for a in (x, p, q, y, r0)]
+    bm = _to_rows(x, nb)[1]
     xo, ro, r0r, rr = update_xr_dots_pallas(
-        jnp.asarray(alpha), jnp.asarray(omega), *arrs, bm=bm, interpret=interpret)
+        jnp.asarray(alpha), jnp.asarray(omega), *arrs, bm=bm,
+        interpret=interpret, batched=batched)
+    if batched:
+        return _like(xo, x, nb), _like(ro, x, nb), r0r[:, 0], rr[:, 0]
     return _like(xo, x), _like(ro, x), r0r[0, 0], rr[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def update_p(beta, omega, r, p, s, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "batched"))
+def update_p(beta, omega, r, p, s, *, interpret: bool | None = None,
+             batched: bool = False):
     from repro.kernels.fused_iter.kernel import update_p_pallas
     interpret = resolve_interpret(interpret)
-    r2, bm = _to_rows(r)
-    p2, _ = _to_rows(p)
-    s2, _ = _to_rows(s)
+    nb = 1 if batched else 0
+    r2, bm = _to_rows(r, nb)
+    p2, _ = _to_rows(p, nb)
+    s2, _ = _to_rows(s, nb)
     po = update_p_pallas(jnp.asarray(beta), jnp.asarray(omega), r2, p2, s2,
-                         bm=bm, interpret=interpret)
-    return _like(po, r)
+                         bm=bm, interpret=interpret, batched=batched)
+    return _like(po, r, nb)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def dot_mixed(a, b, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "batched"))
+def dot_mixed(a, b, *, interpret: bool | None = None, batched: bool = False):
     from repro.kernels.fused_iter.kernel import dot_mixed_pallas
     interpret = resolve_interpret(interpret)
-    a2, bm = _to_rows(a)
-    b2, _ = _to_rows(b)
-    return dot_mixed_pallas(a2, b2, bm=bm, interpret=interpret)[0, 0]
+    nb = 1 if batched else 0
+    a2, bm = _to_rows(a, nb)
+    b2, _ = _to_rows(b, nb)
+    out = dot_mixed_pallas(a2, b2, bm=bm, interpret=interpret, batched=batched)
+    return out[:, 0] if batched else out[0, 0]

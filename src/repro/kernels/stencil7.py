@@ -10,10 +10,18 @@ from ``kernels/stencil_nd`` directly.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.stencil import STAR7, StencilCoeffs
+
+warnings.warn(
+    "repro.kernels.stencil7 is deprecated: the 7-point kernel lives, "
+    "shape-parameterized, in repro.kernels.stencil_nd — import from there. "
+    "This shim re-exports the legacy names and will be removed.",
+    DeprecationWarning, stacklevel=2)
 from repro.kernels import stencil_nd
 from repro.kernels.stencil_nd.fused import (  # noqa: F401  (re-exported API)
     ORDER,

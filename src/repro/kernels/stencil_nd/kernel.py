@@ -73,6 +73,31 @@ def _kernel(vp_ref, *refs, offsets, radius, tile, accum_dtype, resident):
     u_ref[...] = u.astype(u_ref.dtype)
 
 
+def _kernel_batched(vp_ref, *refs, offsets, radius, tile, accum_dtype):
+    """Batched (many-RHS) body: grid is (B, gx, gy, gz); each step works on
+    one RHS's tile window, with the coefficient tiles shared across the
+    batch axis (their BlockSpec ignores the batch index).  Arithmetic per
+    RHS is identical to :func:`_kernel`'s resident path — same window cuts,
+    same accumulation order — so B=1 is bitwise equal to the unbatched
+    kernel."""
+    cf_refs, u_ref = refs[:-1], refs[-1]
+    bxc, byc, zc = tile
+    r = radius
+    vp = vp_ref[0]               # this RHS's whole padded block
+    i, j, k = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    vp = jax.lax.dynamic_slice(
+        vp, (i * bxc, j * byc, k * zc),
+        (bxc + 2 * r, byc + 2 * r, zc + 2 * r))
+    c = lambda a: a.astype(accum_dtype)
+    win = lambda off: vp[r + off[0]:r + off[0] + bxc,
+                         r + off[1]:r + off[1] + byc,
+                         r + off[2]:r + off[2] + zc]
+    u = c(win((0, 0, 0)))        # unit main diagonal (Jacobi preconditioned)
+    for cf_ref, off in zip(cf_refs, offsets):
+        u += c(cf_ref[...]) * c(win(off))
+    u_ref[...] = u[None].astype(u_ref.dtype)
+
+
 def _valid_tile(block: tuple[int, int] | None, zc: int,
                 shape: tuple[int, int, int]) -> tuple[int, int, int]:
     """Trace-time tile validation: clamp to the nearest valid divisors.
@@ -101,22 +126,48 @@ def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
 
     ``v_padded``: (bx+2r, by+2r, Z+2r) iterate with halo (zero-padded for a
     standalone block, fabric-filled by ``core.halo.gather_halo`` inside the
-    distributed solver).  ``coeffs[i]`` is the (bx, by, Z) diagonal that
-    multiplies the ``offsets[i]``-shifted window.
+    distributed solver), or ``(B, bx+2r, by+2r, Z+2r)`` for a batch of B
+    right-hand sides — the batch folds into the grid's leading dimension
+    and every coefficient tile is fetched once per spatial tile regardless
+    of B (the coefficient BlockSpec ignores the batch index).
+    ``coeffs[i]`` is the (bx, by, Z) diagonal that multiplies the
+    ``offsets[i]``-shifted window.
 
     ``block``/``zc`` tile the grid (default: full-block x/y, the paper's
     layout); ``resident`` picks the VMEM form — True keeps the padded
     iterate fully resident (the only form without ``pl.Element``), False
-    streams element-indexed halo'd windows per grid step.
+    streams element-indexed halo'd windows per grid step.  The batched
+    form is always resident (one RHS's padded block per grid step).
     """
     global _TRACED_CALLS
     r = radius
-    bx, by, Z = (s - 2 * r for s in v_padded.shape)
+    nb = v_padded.ndim - 3       # leading batch axis (0 or 1)
+    bx, by, Z = (s - 2 * r for s in v_padded.shape[nb:])
     bxc, byc, zc = _valid_tile(block, zc, (bx, by, Z))
     if resident is None:
         resident = not HAS_PL_ELEMENT
     elif not resident and not HAS_PL_ELEMENT:
         resident = True          # streaming windows need pl.Element
+
+    if nb:
+        B = v_padded.shape[0]
+        grid = (B, bx // bxc, by // byc, Z // zc)
+        vspec = pl.BlockSpec((1,) + v_padded.shape[1:],
+                             lambda b, i, j, k: (b, 0, 0, 0))
+        cspec = pl.BlockSpec((bxc, byc, zc), lambda b, i, j, k: (i, j, k))
+        ospec = pl.BlockSpec((1, bxc, byc, zc), lambda b, i, j, k: (b, i, j, k))
+        _TRACED_CALLS += 1
+        return pl.pallas_call(
+            functools.partial(
+                _kernel_batched, offsets=tuple(offsets), radius=r,
+                tile=(bxc, byc, zc), accum_dtype=accum_dtype),
+            grid=grid,
+            in_specs=[vspec] + [cspec] * len(coeffs),
+            out_specs=ospec,
+            out_shape=jax.ShapeDtypeStruct((B, bx, by, Z), v_padded.dtype),
+            interpret=interpret,
+        )(v_padded, *coeffs)
+
     grid = (bx // bxc, by // byc, Z // zc)
     if not resident:
         vspec = pl.BlockSpec(

@@ -74,19 +74,22 @@ def ring_patch_apply(exchange, cf_list: list[jax.Array], spec: StencilSpec,
     whose fusion can differ by an ulp), so overlap stays bit-identical to
     blocking.  Slab tiles are sized per-slab (a tuned full-block tile does
     not fit a depth-r slab); the slab kernels reuse the default VMEM
-    chunking for their own shapes.
+    chunking for their own shapes.  A batched exchange patches every RHS's
+    ring in the same per-region launches (the slab kernel grids over the
+    batch axis).
     """
     from repro.core import comm, tuning
 
     r = spec.radius
+    pre = (slice(None),) * exchange.n_batch
     itemsize = jnp.dtype(exchange.padded.dtype).itemsize
     for reg in comm.boundary_regions(exchange.shape, fabric, r):
         lo_hi = [(sl.start or 0,
                   exchange.shape[i] if sl.stop is None else sl.stop)
                  for i, sl in enumerate(reg)]
         sub_shape = tuple(hi - lo for lo, hi in lo_hi)
-        sub_vp = exchange.padded[tuple(slice(lo, hi + 2 * r)
-                                       for lo, hi in lo_hi)]
+        sub_vp = exchange.padded[pre + tuple(slice(lo, hi + 2 * r)
+                                             for lo, hi in lo_hi)]
         sub_cfg = tuning.KernelConfig(
             block=sub_shape[:2],
             zc=pick_zc(*sub_shape, itemsize, radius=r,
@@ -94,7 +97,7 @@ def ring_patch_apply(exchange, cf_list: list[jax.Array], spec: StencilSpec,
             resident=config.resident)
         patch = tile_apply(sub_vp, [c[reg] for c in cf_list], spec, sub_cfg,
                            accum_dtype=accum_dtype, interpret=interpret)
-        u = u.at[reg].set(patch)
+        u = u.at[pre + reg].set(patch)
     return u
 
 
@@ -105,21 +108,26 @@ def stencil_apply(coeffs: StencilCoeffs, v: jax.Array, *,
                   interpret: bool | None = None) -> jax.Array:
     """u = A v on a local block (zero-Dirichlet at block edges), any spec.
 
+    ``v`` may carry a leading batch axis (``(B, bx, by, Z)``) — the batch
+    folds into the kernel grid and the tuning lookup keys on the mesh
+    shape alone (a tuned cell's config applies to every batch size).
+
     Tile shapes come from the tuning cache (trace-time lookup keyed by
     {spec x dtype x shape}); without an entry the deterministic default
     (full-block tile, VMEM-budgeted Z chunk) reproduces the untuned kernel.
     """
     from repro.core import tuning
 
-    assert v.ndim == 3, "the fused kernel is 3D"
+    assert v.ndim in (3, 4), "the fused kernel is 3D (+ optional batch axis)"
     if coeffs.diag is not None:
         raise NotImplementedError(
             "the fused stencil kernel assumes the family's unit diagonal; "
             "raw operators go through core.operator.pallas_operator, which "
             "adds the diagonal deviation outside the kernel")
     spec = spec or coeffs.spec
+    nb = v.ndim - 3
     config, _ = tuning.lookup_config(spec, v.dtype, v.shape)
-    vp = jnp.pad(v, spec.radius)
+    vp = jnp.pad(v, [(0, 0)] * nb + [(spec.radius, spec.radius)] * 3)
     return tile_apply(vp, _spec_order(coeffs, spec), spec, config,
                       accum_dtype=accum_dtype, interpret=interpret)
 
@@ -164,6 +172,7 @@ def pallas_local_apply(coeffs, v, fabric, *, policy, overlap: bool | None = None
     r = spec.radius
     cf = coeffs.astype(policy.storage)
     vs = v.astype(policy.storage)
+    nb = vs.ndim - cf.ndim       # leading batch (many-RHS) axes
     cf_list = _spec_order(cf, spec)
     config, _ = tuning.lookup_config(spec, vs.dtype, vs.shape)
     fuse = config.fuse_ring if fuse_ring is None else bool(fuse_ring)
@@ -188,6 +197,7 @@ def pallas_local_apply(coeffs, v, fabric, *, policy, overlap: bool | None = None
         cf, vs, fabric, policy=policy,
         schedule=schedule if schedule is not None else overlap,
         full_fn=kernel,
-        interior_fn=lambda vv: kernel(jnp.pad(vv, r)),
+        interior_fn=lambda vv: kernel(
+            jnp.pad(vv, [(0, 0)] * nb + [(r, r)] * cf.ndim)),
         patch_fn=patch_ring,
         fused_fn=fused_fn)

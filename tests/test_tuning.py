@@ -90,6 +90,24 @@ def test_lookup_hits_cache_and_rejects_stale():
                                         (13, 10, 8))
 
 
+def test_lookup_ignores_batch_dim():
+    """A batched (B, bx, by, Z) apply must hit the cell tuned at the mesh
+    shape: only the trailing mesh dims key the lookup (the kernel's
+    per-step working set is one RHS's tile either way)."""
+    cache = tuning.TuningCache(None)
+    tuned = tuning.KernelConfig(block=(60, 35), zc=48, fuse_ring=True)
+    cache.put(tuning.cache_key(stencil.STAR7, jnp.float32, (600, 595, 96)),
+              tuned)
+    for shape in ((600, 595, 96), (8, 600, 595, 96), (2, 8, 600, 595, 96)):
+        cfg, src = tuning.lookup_config(stencil.STAR7, jnp.float32, shape,
+                                        cache=cache)
+        assert (cfg, src) == (tuned, "cache"), shape
+    # and an untuned batched shape still falls through to default
+    _, src = tuning.lookup_config(stencil.STAR7, jnp.float32,
+                                  (8, 12, 10, 8), cache=cache)
+    assert src == "default"
+
+
 def test_env_var_disables_lookup(monkeypatch):
     monkeypatch.setenv("REPRO_TUNING_CACHE", "off")
     assert tuning.resolve_cache_path() is None
