@@ -4,10 +4,12 @@ iteration spent in the linear solves vs forming the matrices.
 The paper reports MFIX spending 50-70% of its time in the (BiCGStab) linear
 solver and most of the rest forming coefficients — the split that motivates
 putting the whole application, not just the solve, on the fabric.  This
-benchmark measures that split for this repo's SIMPLE implementation per
-{backend x preconditioner} cell: the full step is timed end-to-end, a
-formation-only variant (same halo gathers, same three systems, no solves)
-is timed separately, and the difference is attributed to the solves.
+benchmark sweeps that split per {backend x preconditioner} cell through
+``repro.apps.cfd.driver.measure_solve_share`` — the driver-level accounting
+that times the full step end-to-end and a formation-only variant (same halo
+gathers, same three systems, no solves), attributes the difference to the
+solves, and lands the split in the observability registry
+(``cfd.solve_share``/``cfd.form_share`` gauges) so every run reports it.
 
 Emits ``results/cfd_step.json`` plus ``name,metric,value`` CSV rows
 (the benchmarks/run.py contract).  ``--smoke`` shrinks the grid for CI.
@@ -18,43 +20,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 CELLS = (("reference", "none"), ("reference", "jacobi"),
          ("spmd", "none"), ("spmd", "jacobi"))
 
 
-def _time_fn(fn, args, reps: int) -> float:
-    import jax
-
-    jax.block_until_ready(fn(*args))          # compile
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / reps
-
-
 def measure_cell(cfg, opts, mesh, state, reps: int) -> dict:
-    from repro.apps.cfd import make_step_fn
+    from repro.apps.cfd.driver import measure_solve_share
 
-    u, v, p = state
-    step = make_step_fn(cfg, opts, mesh)
-    form = make_step_fn(cfg, opts, mesh, form_only=True)
-    t_full = _time_fn(step, (u, v, p, u, v), reps)
-    t_form = _time_fn(form, (u, v, p, u, v), reps)
-    t_solve = max(t_full - t_form, 0.0)
-    return {
-        "backend": opts.backend,
-        "precond": (opts.precond if isinstance(opts.precond, str)
-                    else opts.precond.name),
-        "rows": "unit-diagonal" if opts.normalize else "raw",
-        "step_ms": t_full * 1e3,
-        "form_ms": t_form * 1e3,
-        "solve_ms": t_solve * 1e3,
-        "solve_pct": 100.0 * t_solve / t_full,
-        "form_pct": 100.0 * t_form / t_full,
-    }
+    return measure_solve_share(cfg, opts, mesh, state, reps=reps)
 
 
 def sweep(*, smoke: bool = False) -> dict:
@@ -84,6 +58,7 @@ def sweep(*, smoke: bool = False) -> dict:
         cells.append(measure_cell(cfg, opts, cell_mesh, (u, v, p), reps))
     return {
         "generated_by": "benchmarks/cfd_step.py",
+        "schema": "repro.benchmark.v1",
         "smoke": smoke,
         "grid": [n, n],
         "inner_iters": {"momentum": cfg.inner_iters_mom,
@@ -100,7 +75,10 @@ def run(*, smoke: bool = False) -> list[str]:
     path = os.path.join("results", "cfd_step.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    from repro.obs.manifest import write_benchmark_bundle
+    bundle_dir = write_benchmark_bundle("cfd_step", record)
     rows = [f"cfd_step,json_path,{path}"]
+    rows.append(f"cfd_step,run_bundle,{bundle_dir}")
     for c in record["cells"]:
         tag = f"{c['backend']}_{c['precond']}"
         assert 0.0 < c["solve_pct"] < 100.0, f"degenerate split for {tag}: {c}"

@@ -156,6 +156,7 @@ def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
 
     record = {
         "generated_by": "benchmarks/comm_overlap.py",
+        "schema": "repro.benchmark.v1",
         "smoke": smoke,
         "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
         "solver_comms": {k: dataclass_dict(v)
@@ -180,7 +181,10 @@ def run(*, smoke: bool = False) -> list[str]:
     path = os.path.join("results", "comm_overlap.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    from repro.obs.manifest import write_benchmark_bundle
+    bundle_dir = write_benchmark_bundle("comm_overlap", record)
     rows = [f"comm_overlap,json_path,{path}"]
+    rows.append(f"comm_overlap,run_bundle,{bundle_dir}")
     for c in record["matrix"]:
         tag = f"{c['stencil']}_{c['solver']}_{c['schedule']}"
         assert c["converged"], f"cell {tag} did not converge: {c}"

@@ -74,6 +74,7 @@ def sweep(*, smoke: bool = False, force: bool = False,
     wins = [r for r in fresh if r["speedup_vs_default"] > 1.0]
     record = {
         "generated_by": "benchmarks/kernel_autotune.py",
+        "schema": "repro.benchmark.v1",
         "smoke": smoke,
         "cache_path": tuning.resolve_cache_path(),
         "peak_bytes_per_s": tuning.PEAK_BYTES_PER_S,
@@ -92,9 +93,12 @@ def run(*, smoke: bool = False, force: bool = False) -> list[str]:
     path = os.path.join("results", "kernel_autotune.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    from repro.obs.manifest import write_benchmark_bundle
+    bundle_dir = write_benchmark_bundle("kernel_autotune", record)
     rows = [f"kernel_autotune,json_path,{path}",
             f"kernel_autotune,cache_path,{record['cache_path']}",
             f"kernel_autotune,n_cache_hits,{record['n_cache_hits']}"]
+    rows.append(f"kernel_autotune,run_bundle,{bundle_dir}")
     for c in record["cells"]:
         tag = c["key"].replace("/", "_")
         rows.append(f"kernel_autotune,{tag}_cache_hit,{int(c['cache_hit'])}")

@@ -178,6 +178,7 @@ def sweep(*, smoke: bool = False, measure_hlo: bool = True) -> dict:
 
     record = {
         "generated_by": "benchmarks/solver_matrix.py",
+        "schema": "repro.benchmark.v1",
         "smoke": smoke,
         "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
         "matrix": cells,
@@ -196,7 +197,10 @@ def run(*, smoke: bool = False) -> list[str]:
     path = os.path.join("results", "solver_matrix.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    from repro.obs.manifest import write_benchmark_bundle
+    bundle_dir = write_benchmark_bundle("solver_matrix", record)
     rows = [f"solver_matrix,json_path,{path}"]
+    rows.append(f"solver_matrix,run_bundle,{bundle_dir}")
     for c in record["matrix"]:
         tag = f"{c['stencil']}_{c['solver']}_{c['backend']}_{c['precond']}"
         assert c["converged"], f"matrix cell {tag} did not converge: {c}"

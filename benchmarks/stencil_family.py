@@ -128,6 +128,7 @@ def sweep(shapes=SHAPES, *, measure_hlo: bool = True) -> dict:
         })
     return {
         "generated_by": "benchmarks/stencil_family.py",
+        "schema": "repro.benchmark.v1",
         "solve_fabric": "x".join(str(s) for s in mesh.devices.shape),
         "hlo_fabric_devices": _SUBPROC_DEVICES if measure_hlo else 0,
         "cells": cells,
@@ -140,7 +141,10 @@ def run() -> list[str]:
     path = os.path.join("results", "stencil_family.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
+    from repro.obs.manifest import write_benchmark_bundle
+    bundle_dir = write_benchmark_bundle("stencil_family", record)
     rows = [f"stencil_family,json_path,{path}"]
+    rows.append(f"stencil_family,run_bundle,{bundle_dir}")
     for c in record["cells"]:
         n = c["stencil"]
         rows.append(f"stencil_family,{n}_flops_per_pt_spmv,{c['flops_per_point_per_spmv']}")

@@ -30,6 +30,9 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 # npz can't hold non-native dtypes; store them as same-width uint views and
 # record the logical dtype in the manifest.
 _VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
@@ -72,7 +75,10 @@ class CheckpointManager:
             self._pending.join()
 
         def write():
-            with self._lock:
+            # runs on the writer thread for async saves; spans/counters are
+            # thread-safe (the registry locks, span stacks are thread-local)
+            with self._lock, obs_trace.span("checkpoint.write", step=step,
+                                            blocking=blocking):
                 tmp = self._npz(step) + ".tmp.npz"  # savez appends .npz itself
                 stored = [
                     a.view(_VIEW_AS[str(a.dtype)]) if str(a.dtype) in _VIEW_AS else a
@@ -97,6 +103,10 @@ class CheckpointManager:
                 os.replace(mtmp, self._manifest(step))
                 self._gc()
 
+        obs_metrics.counter("checkpoint.saves").inc()
+        obs_metrics.counter(
+            "checkpoint.saves_async" if not blocking else
+            "checkpoint.saves_blocking").inc()
         if blocking:
             write()
         else:
@@ -123,9 +133,11 @@ class CheckpointManager:
         ``like`` may hold arrays or ShapeDtypeStructs; leaves that carry a
         sharding are placed with it (elastic restart onto a different mesh).
         """
+        obs_metrics.counter("checkpoint.restores").inc()
         with open(self._manifest(step)) as f:
             man = json.load(f)
-        data = np.load(self._npz(step))
+        with obs_trace.span("checkpoint.restore", step=step):
+            data = np.load(self._npz(step))
         leaves_like, treedef = jax.tree.flatten(like)
         assert man["n_leaves"] == len(leaves_like), "tree structure changed"
         out = []

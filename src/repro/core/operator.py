@@ -271,6 +271,12 @@ def make_operator(backend: str, coeffs: StencilCoeffs,
         ctor = BACKENDS[backend]
     except KeyError:
         raise KeyError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}") from None
-    if backend == "reference":
-        return ctor(coeffs, policy=policy, **kwargs)
-    return ctor(coeffs, fabric, policy=policy, **kwargs)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    obs_metrics.counter(f"operator.build.{backend}").inc()
+    with obs_trace.span("operator.build", backend=backend,
+                        stencil=coeffs.spec.name, policy=policy.name):
+        if backend == "reference":
+            return ctor(coeffs, policy=policy, **kwargs)
+        return ctor(coeffs, fabric, policy=policy, **kwargs)

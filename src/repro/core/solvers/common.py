@@ -214,3 +214,20 @@ def finish(carry, bnorm2, history=None) -> SolveResult:
     i, x, *_rest, res2, conv, brk = carry
     rel = jnp.sqrt(res2 / jnp.maximum(bnorm2, EPS))
     return SolveResult(x, i, rel, conv, brk, history=history)
+
+
+def emit_solve_metrics(result: SolveResult, *, wall_s: float | None = None,
+                       **labels):
+    """Per-solve observability emission (iterations, per-RHS convergence,
+    residual history) into the :mod:`repro.obs.metrics` registry.
+
+    Safe to call anywhere: under jit/shard_map the result's fields are
+    tracers and this silently no-ops — the drivers call it again on the
+    concrete result, which is where the numbers actually land.  History
+    semantics are solver-agnostic (see ``core/solvers/pipelined``:
+    the pipelined loops realign their lag-1 recorded history), so
+    ``history[k]`` is always the relative residual after iteration k+1.
+    """
+    from repro.obs import metrics as obs_metrics
+
+    return obs_metrics.record_solve(result, wall_s=wall_s, **labels)

@@ -34,8 +34,14 @@ reduction count is asserted from lowered HLO in ``tests/test_solvers.py``.
 Two costs are inherent and documented rather than hidden: (1) convergence
 is checked on the *carried* residual norm (the new residual's norm is not
 known until the next iteration's reduction), so both solvers report one
-iteration more than their generic counterparts and their histories lag by
-a single entry; (2) pipelined CG maintains ``w = A r`` purely by
+iteration more than their generic counterparts, and the residual the scan
+*records* at iteration k is the lag-1 carried norm.  So that metrics
+emission is solver-agnostic, :func:`_align_history` shifts the recorded
+history back into the generic solvers' semantics — ``history[k]`` is the
+relative residual after iteration k+1 for every registered solver; the
+final entry repeats the last *reduced* norm, because the residual after
+the very last update is never reduced (that is the lag-1 cost itself).
+(2) pipelined CG maintains ``w = A r`` purely by
 recurrence, which bounds its attainable accuracy near ``sqrt(eps)`` of the
 storage dtype (the classic Ghysels-Vanroose trade-off) — ask it for f32
 tolerances of ~1e-5, not 1e-8.
@@ -52,6 +58,24 @@ from repro.core.solvers.common import (
     SolveResult, axpy_family, convergence_test, finish, init_counters,
     run_krylov, safe_div,
 )
+
+
+def _align_history(hist):
+    """Shift the lag-1 recorded history into generic-solver semantics.
+
+    The pipelined scans record the *carried* residual: entry k is the norm
+    of the residual after only k updates (entry 0 is ``||r0||``), one slot
+    behind the generic loops' "residual after iteration k+1".  Dropping the
+    leading entry and repeating the final reduced norm restores parity, so
+    ``SolveResult.history[k]`` means the same thing for every solver (and
+    ``rel_residual == history[iterations - 1]`` on convergence).  Converged
+    entries are frozen by ``run_krylov``, so the repeated tail is exact
+    there; on a maxiter exit it repeats the last norm the solver ever saw.
+    Batched histories (``[maxiter, B]``) shift along the iteration axis.
+    """
+    if hist is None:
+        return None
+    return jnp.concatenate([hist[1:], hist[-1:]], axis=0)
 
 
 def pipelined_bicgstab_loop(
@@ -128,7 +152,7 @@ def pipelined_bicgstab_loop(
     init = (i0, x0, r0, r0, s0, s0, t0, rho0, conv0, brk0)
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
-    return finish(final, bnorm2, history=hist)
+    return finish(final, bnorm2, history=_align_history(hist))
 
 
 def pipelined_cg_loop(
@@ -195,7 +219,7 @@ def pipelined_cg_loop(
     )
     final, hist = run_krylov(step, init, maxiter=maxiter, bnorm2=bnorm2,
                              record_history=record_history)
-    return finish(final, bnorm2, history=hist)
+    return finish(final, bnorm2, history=_align_history(hist))
 
 
 def _right_preconditioned(loop):

@@ -272,6 +272,8 @@ def lookup_config(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
     deterministic default is used, with a warning) — so tests and CI can
     assert lookups do not silently regress to defaults.
     """
+    from repro.obs import metrics as obs_metrics
+
     shape = tuple(shape)[-3:]
     cache = cache if cache is not None else get_cache()
     key = cache_key(spec, dtype, shape)
@@ -279,6 +281,7 @@ def lookup_config(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
         tuned = cache.get(key)
         if tuned is not None:
             if tuned.divides(shape):
+                obs_metrics.counter("tuning.lookup.cache").inc()
                 return tuned, "cache"
             warnings.warn(
                 f"tuning-cache entry {key!r} names tile "
@@ -286,7 +289,9 @@ def lookup_config(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
                 f"local block {shape} (stale entry?); using the default "
                 f"config — re-sweep with benchmarks/kernel_autotune.py",
                 stacklevel=2)
+            obs_metrics.counter("tuning.lookup.stale").inc()
             return default_config(spec, dtype, shape), "stale"
+    obs_metrics.counter("tuning.lookup.default").inc()
     return default_config(spec, dtype, shape), "default"
 
 
@@ -437,24 +442,31 @@ def autotune_cell(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
     roofline fraction before/after (bytes moved per :func:`spmv_bytes`
     against :data:`PEAK_BYTES_PER_S`).
     """
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
     cache = cache if cache is not None else get_cache()
     if cache is None:
         cache = TuningCache(resolve_cache_path() or DEFAULT_CACHE_PATH)
     key = cache_key(spec, dtype, shape)
     cached = cache.get(key)
     if cached is not None and not force and cached.divides(shape):
+        obs_metrics.counter("tuning.sweep.cache_hit").inc()
         rec = dict(cache.entries[key])
         rec.update(key=key, cache_hit=True)
         return rec
 
+    obs_metrics.counter("tuning.sweep.runs").inc()
     cands = candidate_configs(spec, dtype, shape, smoke=smoke)
     bytes_moved = spmv_bytes(spec, dtype, shape)
     swept = []
-    for cfg in cands:
-        t = measure_config(spec, dtype, shape, cfg, repeats=repeats,
-                           interpret=interpret)
-        swept.append({"config": cfg.to_json(), "seconds": t,
-                      "roofline_frac": bytes_moved / t / PEAK_BYTES_PER_S})
+    with obs_trace.span("tuning.autotune_cell", key=key,
+                        n_candidates=len(cands)):
+        for cfg in cands:
+            t = measure_config(spec, dtype, shape, cfg, repeats=repeats,
+                               interpret=interpret)
+            swept.append({"config": cfg.to_json(), "seconds": t,
+                          "roofline_frac": bytes_moved / t / PEAK_BYTES_PER_S})
     default_s = swept[0]["seconds"]           # candidate 0 is the default
     best = min(swept, key=lambda s: s["seconds"])
     winner = KernelConfig.from_json(best["config"])
@@ -475,6 +487,10 @@ def autotune_cell(spec: StencilSpec, dtype, shape: tuple[int, int, int], *,
     cache.put(key, winner, record)
     if save:
         cache.save()
+    obs_metrics.event("autotune_sweep", key=key,
+                      best_seconds=best["seconds"],
+                      speedup_vs_default=record["speedup_vs_default"],
+                      roofline_frac_tuned=best["roofline_frac"])
     rec = dict(cache.entries[key])
     rec.update(key=key, cache_hit=False)
     return rec

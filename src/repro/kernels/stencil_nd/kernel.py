@@ -39,11 +39,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.compat import HAS_PL_ELEMENT
+from repro.obs import metrics as obs_metrics
 
 # Count of pallas_call ops traced for the stencil SpMV — the kernel-launch
 # accounting behind the fused boundary-ring epilogue's 2 -> 1 claim (each
 # traced call is one kernel op in the lowered program).  Tests snapshot it
-# around a traced apply; see tests/test_tuning.py.
+# around a traced apply; see tests/test_tuning.py.  Mirrored into the
+# observability registry as ``kernels.stencil_nd.traced_calls``.
 _TRACED_CALLS = 0
 
 
@@ -157,6 +159,7 @@ def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
         cspec = pl.BlockSpec((bxc, byc, zc), lambda b, i, j, k: (i, j, k))
         ospec = pl.BlockSpec((1, bxc, byc, zc), lambda b, i, j, k: (b, i, j, k))
         _TRACED_CALLS += 1
+        obs_metrics.counter("kernels.stencil_nd.traced_calls").inc()
         return pl.pallas_call(
             functools.partial(
                 _kernel_batched, offsets=tuple(offsets), radius=r,
@@ -179,6 +182,7 @@ def stencil_nd_pallas(v_padded: jax.Array, coeffs: list[jax.Array],
         vspec = pl.BlockSpec(v_padded.shape, lambda i, j, k: (0, 0, 0))
     cspec = pl.BlockSpec((bxc, byc, zc), lambda i, j, k: (i, j, k))
     _TRACED_CALLS += 1
+    obs_metrics.counter("kernels.stencil_nd.traced_calls").inc()
     return pl.pallas_call(
         functools.partial(
             _kernel, offsets=tuple(offsets), radius=r,

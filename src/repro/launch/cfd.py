@@ -89,8 +89,36 @@ def main() -> None:
                          "(resumes automatically from the latest checkpoint)")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the Ghia centerline acceptance check")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability: spans + metrics + a run bundle "
+                         "results/runs/<run_id>/ (see docs/observability.md)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in jax.profiler.trace (implies --obs)")
+    ap.add_argument("--run-dir", default=None,
+                    help="bundle directory override (implies --obs)")
     args = ap.parse_args()
 
+    args.obs = args.obs or args.profile or args.run_dir is not None
+    run_ctx = None
+    if args.obs:
+        from repro.obs import manifest as obs_manifest
+        from repro.obs import trace as obs_trace
+
+        obs_trace.enable(sync=True)
+        run_ctx = obs_manifest.start_run(
+            "cfd", config=vars(args), run_dir=args.run_dir,
+            profile=args.profile)
+    try:
+        _cfd(args)
+    finally:
+        if run_ctx is not None:
+            from repro.obs import manifest as obs_manifest
+
+            obs_manifest.finish_run(run_ctx)
+            print(f"run bundle: {run_ctx.run_dir}")
+
+
+def _cfd(args) -> None:
     if args.policy == "f64":
         jax.config.update("jax_enable_x64", True)
     pol = precision.get_policy(args.policy)

@@ -116,8 +116,39 @@ def main() -> None:
                     help="iterative refinement to f32 accuracy")
     ap.add_argument("--paper-separate-reductions", action="store_true",
                     help="paper-faithful: one AllReduce per dot product")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability: spans + metrics + a run bundle "
+                         "results/runs/<run_id>/{manifest.json,events.jsonl,"
+                         "trace.json} (trace.json loads in Perfetto)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the solve in jax.profiler.trace into "
+                         "<run_dir>/jax_profile (implies --obs)")
+    ap.add_argument("--run-dir", default=None,
+                    help="bundle directory override (implies --obs; "
+                         "default results/runs/<run_id>)")
     args = ap.parse_args()
 
+    args.obs = args.obs or args.profile or args.run_dir is not None
+    run_ctx = None
+    if args.obs:
+        from repro.obs import manifest as obs_manifest
+        from repro.obs import trace as obs_trace
+
+        obs_trace.enable(sync=True)
+        run_ctx = obs_manifest.start_run(
+            "solve", config=vars(args), run_dir=args.run_dir,
+            profile=args.profile)
+    try:
+        _solve(args)
+    finally:
+        if run_ctx is not None:
+            from repro.obs import manifest as obs_manifest
+
+            obs_manifest.finish_run(run_ctx)
+            print(f"run bundle: {run_ctx.run_dir}")
+
+
+def _solve(args) -> None:
     if args.policy == "f64":
         # get_policy("f64") refuses to hand out a policy that would silently
         # degrade; the CLI owns process startup, so it can just enable x64.
@@ -170,15 +201,47 @@ def main() -> None:
         print(f"max err vs manufactured solution: {err:.3e}  ({dt:.2f}s)")
         return
 
+    from repro.core.solvers.common import emit_solve_metrics
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
     pconf = PrecondConfig(name=args.precond, degree=args.cheb_degree)
-    t0 = time.time()
-    res = bicgstab.solve_distributed(
-        mesh, cf, b.astype(pol.storage), tol=args.tol, maxiter=args.maxiter,
-        policy=pol, solver=args.solver, backend=args.backend, precond=pconf,
-        schedule=args.schedule,
+    solve_kwargs = dict(
+        tol=args.tol, maxiter=args.maxiter, policy=pol, solver=args.solver,
+        backend=args.backend, precond=pconf, schedule=args.schedule,
         fused_reductions=not args.paper_separate_reductions)
+    labels = dict(solver=args.solver, backend=args.backend,
+                  schedule=args.schedule, nrhs=args.nrhs, problem=problem,
+                  policy=pol.name)
+    bs = b.astype(pol.storage)
+    t0 = time.time()
+    with obs_trace.span("solve.krylov", **labels) as sp:
+        res = bicgstab.solve_distributed(mesh, cf, bs, **solve_kwargs)
+        sp.block(res.x)
     jax.block_until_ready(res.x)
     dt = time.time() - t0
+    emit_solve_metrics(res, wall_s=dt, **labels)
+    if obs_trace.is_enabled():
+        # lowered-HLO collective counts for this exact solve (lower only,
+        # no second compile) — the events.jsonl ground truth tests check
+        with obs_trace.span("solve.lower_hlo"):
+            text = jax.jit(
+                lambda c, v: bicgstab.solve_distributed(
+                    mesh, c, v, **solve_kwargs)).lower(cf, bs).as_text()
+        counts = obs_metrics.record_collectives(text, **labels)
+        print(f"collectives (whole solve HLO): "
+              f"allreduce={counts['allreduce_total']} "
+              f"ppermute={counts['ppermute_total']}")
+    # achieved-vs-peak roofline fraction, the paper's accounting (§VII:
+    # ~1/3 of peak on the CS-1; a CPU smoke run reports a tiny fraction)
+    iters_total = int(np.asarray(res.iterations).sum())
+    from repro.core import perfmodel
+
+    achieved = (perfmodel.FLOPS_PER_PT * float(np.prod(shape))
+                * iters_total / max(dt, 1e-12))
+    frac = obs_metrics.roofline_fraction(achieved)
+    print(f"roofline: {achieved / 1e9:.2f} GFLOP/s achieved, "
+          f"{frac:.2e} of wafer peak")
     bb = np.asarray(b, np.float64)
     r = bb - np.asarray(
         stencil.apply_ref(cf.astype(jnp.float32), res.x.astype(jnp.float32)))

@@ -1,0 +1,230 @@
+"""Run manifests: every launch/benchmark invocation leaves a reproducible
+bundle under ``results/runs/<run_id>/``:
+
+* ``manifest.json`` — versioned ``repro.obs.v1`` record: config cell,
+  git SHA, jax/jaxlib/numpy versions, device topology, XLA/env flags,
+  wall time, and the final metrics snapshot.
+* ``events.jsonl``  — the registry's structured events, one per line.
+* ``trace.json``    — completed spans as Chrome trace events (Perfetto).
+
+Usage (what ``--obs`` wires up in the launch CLIs)::
+
+    ctx = manifest.start_run("solve", config=vars(args), profile=args.profile)
+    ... run ...
+    manifest.finish_run(ctx)
+
+``scripts/compare_runs.py`` diffs two such bundles and CI validates
+their schema, so keep :func:`validate_manifest` in sync with the writer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+from repro.obs import metrics, trace
+
+SCHEMA = "repro.obs.v1"
+DEFAULT_ROOT = os.path.join("results", "runs")
+
+# Env vars worth pinning in the manifest: anything that changes lowering,
+# device fabric, kernels, or cache behavior.
+_ENV_KEYS = ("XLA_FLAGS", "JAX_ENABLE_X64", "JAX_PLATFORMS",
+             "REPRO_DEVICES", "REPRO_PALLAS_INTERPRET", "REPRO_TUNING_CACHE",
+             "LD_PRELOAD", "TF_CPP_MIN_LOG_LEVEL")
+
+_REQUIRED_FIELDS = ("schema", "run_id", "kind", "created_unix", "created",
+                    "argv", "config", "git", "versions", "devices", "env",
+                    "metrics", "wall_s")
+
+
+def git_info() -> dict:
+    """Best-effort git SHA/branch/dirty for the working tree."""
+    def _run(*cmd):
+        try:
+            out = subprocess.run(["git", *cmd], capture_output=True,
+                                 text=True, timeout=10)
+            return out.stdout.strip() if out.returncode == 0 else None
+        except Exception:
+            return None
+
+    sha = _run("rev-parse", "HEAD")
+    return {
+        "sha": sha or "unknown",
+        "branch": _run("rev-parse", "--abbrev-ref", "HEAD") or "unknown",
+        "dirty": bool(_run("status", "--porcelain")) if sha else None,
+    }
+
+
+def versions() -> dict:
+    out = {"python": platform.python_version()}
+    for mod in ("jax", "jaxlib", "numpy"):
+        try:
+            out[mod] = __import__(mod).__version__
+        except Exception:
+            out[mod] = None
+    return out
+
+
+def device_topology() -> dict:
+    """Device platform/count as jax sees it (fake fabrics included)."""
+    try:
+        import jax
+
+        devs = jax.devices()
+        return {
+            "platform": devs[0].platform if devs else None,
+            "n_devices": len(devs),
+            "kinds": sorted({d.device_kind for d in devs}),
+            "process_count": jax.process_count(),
+        }
+    except Exception:
+        return {"platform": None, "n_devices": 0, "kinds": [],
+                "process_count": None}
+
+
+def env_flags() -> dict:
+    return {k: os.environ[k] for k in _ENV_KEYS if k in os.environ}
+
+
+def new_run_id(kind: str) -> str:
+    stamp = time.strftime("%Y%m%dT%H%M%S", time.gmtime())
+    return f"{stamp}-{kind}-{os.getpid() % 100000:05d}"
+
+
+def _jsonable(obj):
+    """Coerce argparse namespaces / dataclasses / tuples into JSON."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+@dataclasses.dataclass
+class RunContext:
+    run_id: str
+    run_dir: str
+    kind: str
+    config: dict
+    t_start: float
+    profile: bool = False
+    _profiler = None
+
+
+def start_run(kind: str, *, config: dict | None = None,
+              run_dir: str | None = None, root: str = DEFAULT_ROOT,
+              profile: bool = False) -> RunContext:
+    """Open a run bundle directory (creating it) and optionally start the
+    jax profiler into ``<run_dir>/jax_profile``."""
+    run_id = new_run_id(kind)
+    if run_dir is None:
+        run_dir = os.path.join(root, run_id)
+    os.makedirs(run_dir, exist_ok=True)
+    ctx = RunContext(run_id=run_id, run_dir=run_dir, kind=kind,
+                     config=_jsonable(config or {}),
+                     t_start=time.time(), profile=profile)
+    if profile:
+        try:
+            import jax
+
+            ctx._profiler = jax.profiler.trace(
+                os.path.join(run_dir, "jax_profile"))
+            ctx._profiler.__enter__()
+        except Exception:  # pragma: no cover - profiler-less builds
+            ctx._profiler = None
+    metrics.event("run_start", run_id=run_id, kind=kind)
+    return ctx
+
+
+def finish_run(ctx: RunContext, *, extra: dict | None = None) -> dict:
+    """Write ``manifest.json``, ``events.jsonl``, and ``trace.json``."""
+    if ctx._profiler is not None:
+        try:
+            ctx._profiler.__exit__(None, None, None)
+        except Exception:  # pragma: no cover
+            pass
+        ctx._profiler = None
+    wall = time.time() - ctx.t_start
+    metrics.event("run_finish", run_id=ctx.run_id, wall_s=wall)
+
+    man = {
+        "schema": SCHEMA,
+        "run_id": ctx.run_id,
+        "kind": ctx.kind,
+        "created_unix": ctx.t_start,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                 time.gmtime(ctx.t_start)),
+        "argv": list(sys.argv),
+        "config": ctx.config,
+        "git": git_info(),
+        "versions": versions(),
+        "devices": device_topology(),
+        "env": env_flags(),
+        "metrics": metrics.snapshot(),
+        "wall_s": wall,
+    }
+    if extra:
+        man.update(_jsonable(extra))
+
+    with open(os.path.join(ctx.run_dir, "events.jsonl"), "w") as f:
+        for ev in metrics.events():
+            f.write(json.dumps(_jsonable(ev)) + "\n")
+    with open(os.path.join(ctx.run_dir, "trace.json"), "w") as f:
+        json.dump(trace.chrome_trace(), f)
+    with open(os.path.join(ctx.run_dir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=2)
+    return man
+
+
+def validate_manifest(man: dict) -> list[str]:
+    """Schema check used by tests, CI, and compare_runs.  Returns a list of
+    problems (empty == valid)."""
+    problems = []
+    for field in _REQUIRED_FIELDS:
+        if field not in man:
+            problems.append(f"missing field: {field}")
+    if man.get("schema") != SCHEMA:
+        problems.append(f"schema is {man.get('schema')!r}, want {SCHEMA!r}")
+    if not isinstance(man.get("metrics"), dict):
+        problems.append("metrics is not an object")
+    else:
+        for sub in ("counters", "gauges", "histograms"):
+            if sub not in man["metrics"]:
+                problems.append(f"metrics missing {sub!r}")
+    git = man.get("git")
+    if not (isinstance(git, dict) and "sha" in git):
+        problems.append("git.sha missing")
+    dev = man.get("devices")
+    if not (isinstance(dev, dict) and "n_devices" in dev):
+        problems.append("devices.n_devices missing")
+    return problems
+
+
+def load_manifest(run_dir: str) -> dict:
+    with open(os.path.join(run_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def write_benchmark_bundle(name: str, record: dict,
+                           root: str = DEFAULT_ROOT) -> str:
+    """One-shot bundle for a benchmark record (the benchmarks/run.py hook):
+    the record lands both as a ``benchmark_record`` event and as
+    ``record.json`` next to the manifest.  Returns the run directory."""
+    ctx = start_run(f"bench-{name}", config={"benchmark": name})
+    metrics.event("benchmark_record", name=name,
+                  schema=record.get("schema"),
+                  generated_by=record.get("generated_by"))
+    with open(os.path.join(ctx.run_dir, "record.json"), "w") as f:
+        json.dump(_jsonable(record), f, indent=2)
+    finish_run(ctx, extra={"benchmark": name})
+    return ctx.run_dir

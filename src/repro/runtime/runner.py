@@ -24,6 +24,8 @@ from typing import Callable
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLMData
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 log = logging.getLogger(__name__)
 
@@ -64,6 +66,9 @@ class FaultTolerantRunner:
                 return self._run_from(*state)
             except Exception as e:  # noqa: BLE001 — the whole point
                 self.restarts += 1
+                obs_metrics.counter("runner.restarts").inc()
+                obs_metrics.event("runner_restart", restart=self.restarts,
+                                  error=f"{type(e).__name__}: {e}")
                 if self.restarts > self.cfg.max_restarts:
                     raise RuntimeError(
                         f"exceeded restart budget ({self.cfg.max_restarts})") from e
@@ -83,7 +88,10 @@ class FaultTolerantRunner:
                 break
             if self.failure_hook is not None:
                 self.failure_hook(step)      # may raise: injected fault
-            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            with obs_trace.span("runner.step", step=step):
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch)
+            obs_metrics.counter("runner.steps").inc()
             self.metrics_history.append(
                 {"step": step, **{k: float(v) for k, v in metrics.items()}})
             if (step + 1) % self.cfg.checkpoint_every == 0:

@@ -31,3 +31,14 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
 @pytest.fixture(scope="session")
 def subproc():
     return run_with_devices
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    """Observability state is process-global; keep tests isolated."""
+    yield
+    from repro.obs import metrics, trace
+
+    metrics.reset()
+    trace.reset()
+    trace.disable()
